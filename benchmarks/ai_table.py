@@ -1,0 +1,31 @@
+"""§VI arithmetic-intensity / worker-selection table (paper numbers beside
+ours)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CGRA, analyze
+from repro.core.roofline import worker_demand_gflops
+from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+
+PAPER = {
+    "stencil1d": {"ai": 2.06, "bw_peak": 206.0, "workers": 6, "demand": 237.6},
+    "stencil2d": {"ai": 5.59, "bw_peak": 559.0, "workers": 5, "demand": 582.0},
+}
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for name, spec in [("stencil1d", paper_stencil_1d()),
+                       ("stencil2d", paper_stencil_2d())]:
+        t0 = time.perf_counter()
+        rep = analyze(spec, CGRA)
+        us = (time.perf_counter() - t0) * 1e6
+        p = PAPER[name]
+        derived = (f"AI={rep.arithmetic_intensity:.3f}(paper {p['ai']}) "
+                   f"BWpeak={rep.bw_bound_gflops:.1f}(paper {p['bw_peak']}) "
+                   f"w*={rep.workers}(paper {p['workers']}) "
+                   f"demand={worker_demand_gflops(spec, CGRA, rep.workers):.1f}"
+                   f"(paper {p['demand']}) bound={rep.bound}")
+        rows.append((f"ai_table/{name}", us, derived))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 12 roofline curves: achievable GFLOPS vs arithmetic intensity for the
+CGRA, with the two paper stencils placed on the curve, plus the TPU-v5e port
+curve (DESIGN.md §3 constants)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CGRA, TPU_V5E, analyze
+from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    t0 = time.perf_counter()
+    pts = []
+    for ai_x10 in (5, 10, 21, 41, 56, 62, 80, 120, 200):   # AI sweep x0.1
+        ai = ai_x10 / 10
+        g = min(CGRA.bw_gbps * ai, CGRA.peak_gflops)
+        pts.append(f"{ai:.1f}:{g:.0f}")
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("fig12/cgra_curve", us, " ".join(pts)))
+
+    for name, spec in [("stencil1d", paper_stencil_1d()),
+                       ("stencil2d", paper_stencil_2d())]:
+        t0 = time.perf_counter()
+        c = analyze(spec, CGRA)
+        v = analyze(spec, TPU_V5E)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig12/{name}", us,
+                     f"CGRA={c.achievable_gflops:.0f}GF({c.bound}) "
+                     f"TPUv5e={v.achievable_gflops/1000:.2f}TF({v.bound}) "
+                     f"ridgeAI_cgra={CGRA.peak_gflops/CGRA.bw_gbps:.2f} "
+                     f"ridgeAI_tpu={TPU_V5E.peak_gflops/TPU_V5E.bw_gbps:.1f}"))
+    return rows

@@ -1,0 +1,25 @@
+"""§IV temporal fusion (implemented beyond the paper): AI growth, the
+memory->compute crossover, PE budget, and seam overhead per fused depth."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CGRA, TPU_V5E, crossover_timesteps, fusion_report
+from repro.core.spec import paper_stencil_1d
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    spec = paper_stencil_1d()
+    for machine in (CGRA, TPU_V5E):
+        t0 = time.perf_counter()
+        rep = fusion_report(spec, machine, workers=6, max_t=8)
+        cx = crossover_timesteps(spec, machine, workers=6)
+        us = (time.perf_counter() - t0) * 1e6
+        pts = " ".join(f"T{p.timesteps}:AI={p.arithmetic_intensity:.1f},"
+                       f"{p.achievable_gflops:.0f}GF,{p.bound[:3]}"
+                       f"{'' if p.fits_fabric else ',!fit'}"
+                       for p in rep[:6])
+        rows.append((f"fusion/{machine.name}", us,
+                     f"crossover_T={cx} {pts}"))
+    return rows

@@ -1,0 +1,57 @@
+"""Paper-style analytical roofline for the TPU Pallas kernels + measured
+XLA-path wall time on this host (CPU) for scale.
+
+The TPU numbers are structural (AI x BW vs peak — the same §VI method with
+v5e constants); wall-clock MFU cannot be measured in this container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E, analyze
+from repro.core.spec import StencilSpec, paper_stencil_1d, paper_stencil_2d
+from repro.kernels.stencil1d.ref import stencil1d_ref
+from repro.kernels.stencil2d.ref import stencil2d_ref
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # paper 1D stencil, fp32, T=1 and fused T=8 on TPU constants
+    for t in (1, 4, 8):
+        spec = dataclasses.replace(paper_stencil_1d(dtype="float32"),
+                                   timesteps=t)
+        rep = analyze(spec, TPU_V5E)
+        x = jnp.asarray(rng.normal(size=(1, 194400)), jnp.float32)
+        us = _time(jax.jit(lambda a: stencil1d_ref(a, spec.coeffs[0],
+                                                   timesteps=t)), x)
+        rows.append((f"kernel_roofline/stencil1d_T{t}", us,
+                     f"AI={rep.arithmetic_intensity:.2f} "
+                     f"v5e={rep.achievable_gflops/1000:.2f}TF "
+                     f"bound={rep.bound} host_xla_us={us:.0f}"))
+
+    spec2 = paper_stencil_2d(dtype="float32")
+    rep2 = analyze(spec2, TPU_V5E)
+    x2 = jnp.asarray(rng.normal(size=(1, 449, 960)), jnp.float32)
+    us = _time(jax.jit(lambda a: stencil2d_ref(a, spec2.coeffs[0],
+                                               spec2.coeffs[1])), x2)
+    rows.append(("kernel_roofline/stencil2d", us,
+                 f"AI={rep2.arithmetic_intensity:.2f} "
+                 f"v5e={rep2.achievable_gflops/1000:.2f}TF "
+                 f"bound={rep2.bound} host_xla_us={us:.0f}"))
+    return rows

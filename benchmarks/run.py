@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV (assignment deliverable (d)).
+  table1            — §VIII Table I  (CGRA sim vs V100 roofline)
+  ai_table          — §VI arithmetic (AI, w*, demands)
+  fig12_roofline    — §VI Fig. 12    (roofline curves, CGRA + TPU port)
+  kernel_roofline   — TPU kernel rooflines (paper method, v5e constants)
+  fusion_crossover  — §IV temporal fusion (beyond paper)
+  vii_gpu_efficiency — §VII efficiency-vs-AI trend (incl. 3D stencils)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (ai_table, fig12_roofline, fusion_crossover,
+                        kernel_roofline, table1, vii_gpu_efficiency)
+
+MODULES = [ai_table, fig12_roofline, table1, kernel_roofline,
+           fusion_crossover, vii_gpu_efficiency]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in MODULES:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:
+            failed += 1
+            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Table I: comparative analysis of stencils on CGRA vs V100.
+
+Methodology (matching §VIII): simulate one CGRA tile cycle-accurately on a
+reduced grid (utilization is scale-stable once startup is amortized — the
+paper itself extrapolates 1 tile -> 16), apply the paper's 16-tile scaling,
+and compare against the V100 roofline at the paper's measured efficiencies
+(90% for 1D, 48% for 2D).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CGRA, V100, analyze, map_1d, map_2d, simulate
+from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+
+V100_EFF = {"stencil1d": 0.90, "stencil2d": 0.48,
+            "stencil2d_conflict0.8": 0.48}          # paper Table I
+PAPER_SPEEDUP = {"stencil1d": 1.9, "stencil2d": 3.03,
+                 "stencil2d_conflict0.8": 3.03}
+PAPER_PCT = {"stencil1d": 0.91, "stencil2d": 0.78,
+             "stencil2d_conflict0.8": 0.78}
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    for name, spec, plan_fn, workers, mem_eff in [
+        ("stencil1d", paper_stencil_1d(n=19440, rx=8), map_1d, 6, 1.0),
+        ("stencil2d", paper_stencil_2d(ny=113, nx=240, r=12), map_2d, 5, 1.0),
+        # the paper attributes its 2D gap to cache conflict misses; 0.80
+        # effective memory bandwidth reproduces its cycle-accurate result.
+        ("stencil2d_conflict0.8", paper_stencil_2d(ny=113, nx=240, r=12),
+         map_2d, 5, 0.80),
+    ]:
+        t0 = time.perf_counter()
+        plan = plan_fn(spec, workers=workers)
+        x = rng.normal(size=spec.grid_shape)
+        res = simulate(plan, x, CGRA, mem_efficiency=mem_eff)
+        us = (time.perf_counter() - t0) * 1e6
+
+        cgra16 = CGRA.scaled(16)
+        cgra_gf = analyze(spec, cgra16).achievable_gflops * res.pct_of_roofline
+        v100_gf = analyze(spec, V100).achievable_gflops * V100_EFF[name]
+        speedup = cgra_gf / v100_gf
+        rows.append((f"table1/{name}", us,
+                     f"sim%roofline={res.pct_of_roofline:.1%}"
+                     f"(paper {PAPER_PCT[name]:.0%}) "
+                     f"16tiles={cgra_gf/1000:.2f}TF "
+                     f"V100={v100_gf/1000:.2f}TF "
+                     f"speedup={speedup:.2f}x(paper {PAPER_SPEEDUP[name]}x) "
+                     f"cycles={res.cycles} loads={res.loads}"))
+    return rows

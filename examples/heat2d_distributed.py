@@ -1,0 +1,59 @@
+import os
+if __name__ == "__main__":
+    # 8 fake devices for the multi-device demo — set before jax initializes.
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+"""Heat diffusion (the paper's application domain) end-to-end, multi-device.
+
+A 2D heat equation is stepped with the 5-pt Jacobi stencil:
+  * sharded over a (2, 4) device mesh with halo exchange (ppermute — the
+    paper's PE-to-PE forwarding at chip scale),
+  * T time-steps fused per exchange (§IV temporal pipelining),
+  * validated against the single-device oracle every fused block.
+
+Run:  PYTHONPATH=src python examples/heat2d_distributed.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reference import stencil_reference_np
+from repro.core.spec import heat_2d
+from repro.distributed.halo import distributed_stencil2d, halo_bytes_per_step
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    fuse_t = 4
+    spec = dataclasses.replace(heat_2d(256, 512, alpha=0.12), timesteps=fuse_t)
+    step = distributed_stencil2d(spec, mesh, axes=("pod", "data"))
+
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(256, 512)).astype(np.float32)
+    u_ref = u.copy()
+    ud = jnp.asarray(u)
+
+    print(f"mesh {dict(mesh.shape)}; fusing T={fuse_t} steps per halo "
+          f"exchange; halo traffic/exchange = "
+          f"{halo_bytes_per_step(spec, (2, 4)) / 1024:.1f} KiB "
+          f"(vs {256*512*4/1024:.0f} KiB full grid)")
+
+    t0 = time.time()
+    for block in range(3):
+        ud = step(ud)
+        u_ref = stencil_reference_np(u_ref, spec)
+        err = float(np.abs(np.asarray(ud) - u_ref).max())
+        print(f"fused block {block}: {fuse_t} steps, max err vs oracle "
+              f"{err:.2e}")
+        assert err < 1e-4
+    print(f"done in {time.time() - t0:.2f}s — {3 * fuse_t} heat steps, "
+          f"3 halo exchanges (4x fewer messages than unfused)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example (deliverable (b)): a reduced decoder-only LM
+serving a queue of requests through the BatchEngine (fixed decode slots,
+slot recycling, greedy sampling).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+
+def main():
+    from repro.launch.serve import main as serve_main
+    raise SystemExit(serve_main([
+        "--arch", "qwen2.5-3b", "--reduced", "--requests", "6",
+        "--slots", "3", "--prompt-len", "10", "--max-new", "12",
+        "--cache-len", "64"]))
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "src")
+    main()

@@ -1,0 +1,41 @@
+"""End-to-end LM training driver (deliverable (b)): train a small LM for a
+few hundred steps through the full substrate stack — synthetic data pipeline
+with prefetch, AdamW + cosine schedule, remat, microbatch accumulation, async
+checkpointing, resume, straggler watchdog.
+
+Default: ~13M-param llama-family model sized for this CPU container.
+``--scale 100m`` uses a ~100M config (same code path, proportionally slower).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--scale 100m]
+"""
+import argparse
+import sys
+
+
+def main():
+    from repro.launch.train import main as train_main
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--scale", default="13m", choices=["13m", "100m"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = ["--arch", "tinyllama-1.1b", "--reduced",
+            "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+            "--lr", "1e-3", "--microbatches", "2", "--remat", "dots",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--log-every", "20",
+            "--override", "num_layers=6", "--override", "d_model=384",
+            "--override", "num_heads=6", "--override", "num_kv_heads=2",
+            "--override", "d_ff=1024", "--override", "vocab_size=8192"]
+    if args.scale == "100m":
+        argv = argv[:-12] + [
+            "--override", "num_layers=12", "--override", "d_model=768",
+            "--override", "num_heads=12", "--override", "num_kv_heads=4",
+            "--override", "d_ff=2048", "--override", "vocab_size=32000"]
+    raise SystemExit(train_main(argv))
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "src")
+    main()

@@ -1,0 +1,150 @@
+"""Checkpoint manager: atomic, async-capable, keep-N, mesh-agnostic.
+
+Layout:  <dir>/step_<k>/  { manifest.json, arr_<i>.npy ... }
+  * arrays are written with ``jax.device_get`` (host, unsharded) and a JSON
+    manifest of the flattened tree paths — resuming onto a *different* mesh
+    just re-shards at load (elastic scaling; DESIGN.md §6).
+  * writes go to ``<dir>/.tmp_step_<k>`` then ``os.rename`` — a crash mid-write
+    can never corrupt the latest checkpoint (restart-safety).
+  * ``save(..., blocking=False)`` hands the host arrays to a writer thread so
+    the train loop overlaps checkpoint I/O with compute.
+  * data-pipeline state (step counter etc.) rides in the manifest, so a
+    restore resumes the exact batch sequence.
+
+At 1000+-node scale this single-writer host format is replaced by per-host
+shard files (same manifest schema, ``shard_<host>`` suffix); the tree/path
+logic below is unchanged — noted in README §Scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree.flatten_with_path(tree)
+    named = [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
+    return named, treedef
+
+
+# numpy can't serialize bf16/fp8 — store them as same-width uints and keep
+# the logical dtype in the manifest.
+_UINT_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    dt = str(arr.dtype)
+    try:
+        np.dtype(dt)
+        if arr.dtype.kind in "fiub":
+            return arr, dt
+    except TypeError:
+        pass
+    return arr.view(_UINT_VIEW[arr.dtype.itemsize]), dt
+
+
+def _decode(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if str(arr.dtype) == logical_dtype:
+        return arr
+    import ml_dtypes  # bundled with jax
+    return arr.view(np.dtype(getattr(ml_dtypes, logical_dtype)))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ----- save -------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             blocking: bool = True) -> None:
+        self.wait()   # never two writers at once (blocking save could race
+                      # an in-flight async save of the same step)
+        named, _ = _flatten(tree)
+        host = [(name, np.asarray(jax.device_get(leaf)))
+                for name, leaf in named]
+        if blocking:
+            self._write(step, host, extra or {})
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: list, extra: dict) -> None:
+        tmp = os.path.join(self.dir, f".tmp_step_{step:08d}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "arrays": []}
+        for i, (name, arr) in enumerate(host):
+            fn = f"arr_{i:05d}.npy"
+            enc, logical = _encode(arr)
+            np.save(os.path.join(tmp, fn), enc)
+            manifest["arrays"].append(
+                {"name": name, "file": fn, "shape": list(arr.shape),
+                 "dtype": logical})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n] if self.keep_n > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ----- restore ------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any | None = None
+                ) -> tuple[Any, dict]:
+        """Restore into the structure of ``like`` (a tree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching tree of
+        NamedShardings — arrays go straight to their (possibly different)
+        mesh placement: elastic resume."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_name = {a["name"]: a for a in manifest["arrays"]}
+        named, treedef = _flatten(like)
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(named))
+        vals = []
+        for (name, leaf), shard in zip(named, shard_leaves):
+            a = by_name[name]
+            arr = _decode(np.load(os.path.join(d, a["file"])), a["dtype"])
+            expect = tuple(leaf.shape)
+            if tuple(arr.shape) != expect:
+                raise ValueError(f"ckpt shape mismatch for {name}: "
+                                 f"{arr.shape} vs {expect}")
+            if shard is not None:
+                vals.append(jax.device_put(arr, shard))
+            else:
+                vals.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree.unflatten(treedef, vals), manifest["extra"]

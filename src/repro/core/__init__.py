@@ -1,0 +1,13 @@
+"""The paper's contribution: stencil specs, CGRA mapping, simulation, roofline."""
+from repro.core.spec import StencilSpec, heat_2d, paper_stencil_1d, paper_stencil_2d
+from repro.core.reference import stencil_reference, stencil_reference_np
+from repro.core.roofline import CGRA, TPU_V5E, V100, Machine, analyze, TpuRooflineTerms
+from repro.core.mapping import MappingPlan, map_1d, map_2d, plan_blocks
+from repro.core.simulator import SimDeadlock, SimResult, simulate
+from repro.core.temporal import crossover_timesteps, fusion_report
+
+__all__ = ["StencilSpec", "heat_2d", "paper_stencil_1d", "paper_stencil_2d",
+           "stencil_reference", "stencil_reference_np", "CGRA", "TPU_V5E",
+           "V100", "Machine", "analyze", "TpuRooflineTerms", "MappingPlan",
+           "map_1d", "map_2d", "plan_blocks", "SimDeadlock", "SimResult",
+           "simulate", "crossover_timesteps", "fusion_report"]

@@ -1,0 +1,323 @@
+"""Stencil → CGRA dataflow-graph mapping (paper §III).
+
+Implements the paper's worker-pipeline decomposition:
+
+* ``w`` **reader workers** load the input grid in an *interleaved* manner
+  (reader k loads elements k, k+w, k+2w, … in row-major flat order).
+* ``w`` **compute workers**: worker c computes interior outputs c, c+w, … (in
+  row-major interior order) with a MUL→MAC→…→MAC chain, one arithmetic PE per
+  coefficient tap.  Every tap has its own **data-filtering PE** that drops the
+  values its MUL/MAC must not see — the paper's ``0^m 1^n 0^p`` patterns,
+  generalized here per-dimension (lead/keep/drop along the row axis times a
+  kept row-band along the column axis; §III-A, Fig. 6).
+* ``w`` **writer workers** store outputs, fed by per-writer address generators
+  (the paper's control units).
+* ``w`` **synchronization workers** count stores against an analytically
+  known expectation and combine into one "done" signal (§III-A).
+
+2D (§III-B): each compute worker owns an x-dimension chain (taps fed by 2rx+1
+*different* readers) and a y-dimension chain (all 2ry taps fed by the *same*
+reader — the one that owns the output column), joined by a final ADD.  The
+**mandatory buffering** requirement (≈ 2·ry rows resident in queues) falls out
+of the per-tap filter row-bands and is returned in the plan as per-edge
+minimum queue capacities so the simulator can verify both the bound and the
+deadlock the paper warns about.
+
+Requirement carried over from the paper's column-ownership argument: for 2D,
+``nx % w == 0`` (each reader owns whole columns).  The planner pads/blocks
+otherwise (strip-mining, §III-B "Blocking").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+from repro.core.dfg import DFG, Node
+from repro.core.spec import StencilSpec
+
+
+@dataclasses.dataclass
+class MappingPlan:
+    spec: StencilSpec
+    workers: int
+    dfg: DFG
+    reader_loads: list[list[int]]         # flat indices per reader
+    writer_stores: list[list[int]]        # flat indices per writer
+    sync_expect: list[int]
+    pe_counts: dict
+    mac_pes: int
+    min_capacities: dict[int, int]        # edge id -> analytic min queue depth
+    notes: str = ""
+
+
+# ---------------------------------------------------------------------------
+# 1D mapping (paper §III-A, Figs. 3-7)
+# ---------------------------------------------------------------------------
+def map_1d(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
+           auto_capacity: bool = False) -> MappingPlan:
+    """1D mapping.  ``spec.timesteps > 1`` stacks compute-worker *layers* —
+    the paper's §IV temporal pipeline (left as future work there): layer t's
+    taps consume directly from layer t-1's chain outputs, writers attach only
+    to the final layer, and the interleave/filter arithmetic is *identical*
+    at every layer because layer t's worker c tap j always sources worker
+    ``(c+j) % w`` of the producing layer with lead ``(c+j) // w``.
+    """
+    assert spec.ndim == 1, "map_1d needs a 1D spec"
+    (n,) = spec.grid_shape
+    (r,) = spec.radii
+    coeffs = spec.coeffs[0]
+    w = workers
+    T = spec.timesteps
+    g = DFG(f"stencil1d_n{n}_r{r}_w{w}_t{T}")
+
+    # reader workers -------------------------------------------------------
+    reader_loads = [list(range(k, n, w)) for k in range(w)]
+    readers: list[Node] = []
+    for k in range(w):
+        addr = g.add("addr", f"rd_addr{k}", stage="reader", worker=k,
+                     count=len(reader_loads[k]))
+        load = g.add("load", f"rd{k}", stage="reader", worker=k,
+                     indices=reader_loads[k])
+        g.connect(addr, load, capacity=queue_capacity)
+        readers.append(load)
+
+    # compute-worker layers (one per fused time-step) ------------------------
+    min_caps: dict[int, int] = {}
+    sources = readers          # layer 0 sources
+    out_idx: list[list[int]] = []
+    for layer in range(1, T + 1):
+        out_idx = [list(range(layer * r + c, n - layer * r, w)) for c in range(w)]
+        tails: list[Node] = []
+        for c in range(w):
+            n_c = len(out_idx[c])
+            prev: Node | None = None
+            for j in range(2 * r + 1):
+                lead = (c + j) // w                  # 0^m: drop first m tokens
+                keep = _make_keep_1d(lead, n_c)
+                f = g.add("filter", f"flt_l{layer}_w{c}_t{j}", stage="compute",
+                          worker=c, m=lead, n=n_c, layer=layer, keep=keep)
+                g.connect(sources[(c + j) % w], f, capacity=queue_capacity)
+                op = "mul" if prev is None else "mac"
+                pe = g.add(op, f"{op}_l{layer}_w{c}_t{j}", stage="compute",
+                           worker=c, coeff=float(coeffs[j]), layer=layer)
+                if prev is not None:
+                    g.connect(prev, pe, port=0, capacity=queue_capacity)
+                e = g.connect(f, pe, port=(0 if prev is None else 1),
+                              capacity=queue_capacity)
+                # taps later in the chain see their value arrive earlier than
+                # the partial sum; min depth ~ distance from chain head.
+                min_caps[id(e)] = max(2, 2 * r - j + 2)
+                prev = pe
+            tails.append(prev)
+        sources = tails
+
+    # writer + sync workers --------------------------------------------------
+    syncs = _attach_writers(g, sources, out_idx, queue_capacity)
+    done = g.add("cmp", "done", stage="sync", worker=-1)
+    for s in syncs:
+        g.connect(s, done, capacity=queue_capacity)
+
+    if auto_capacity:
+        _apply_min_caps(g, min_caps)
+    return MappingPlan(
+        spec=spec, workers=w, dfg=g, reader_loads=reader_loads,
+        writer_stores=out_idx, sync_expect=[len(o) for o in out_idx],
+        pe_counts=g.pe_counts(), mac_pes=g.mac_pes(), min_capacities=min_caps,
+        notes=(f"1D: {T} layer(s) x {w} workers x ({2*r} MAC + 1 MUL); "
+               f"final interior [{T*r},{n-T*r})"))
+
+
+# ---------------------------------------------------------------------------
+# 2D mapping (paper §III-B, Figs. 9-11)
+# ---------------------------------------------------------------------------
+def map_2d(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
+           auto_capacity: bool = False) -> MappingPlan:
+    assert spec.ndim == 2, "map_2d needs a 2D spec"
+    ny, nx = spec.grid_shape
+    ry, rx = spec.radii
+    cy, cx = spec.coeffs
+    w = workers
+    if nx % w:
+        raise ValueError(
+            f"2D mapping needs nx % w == 0 (column ownership); got {nx} % {w}. "
+            "Strip-mine with plan_blocks() first.")
+    g = DFG(f"stencil2d_{ny}x{nx}_r{ry}x{rx}_w{w}")
+    ncpr = nx // w                                   # columns per reader
+    n_rows = ny - 2 * ry
+
+    # readers: reader k owns columns ≡ k (mod w), streamed row-major ---------
+    reader_loads = [[j * nx + i for j in range(ny) for i in range(k, nx, w)]
+                    for k in range(w)]
+    readers: list[Node] = []
+    for k in range(w):
+        addr = g.add("addr", f"rd_addr{k}", stage="reader", worker=k,
+                     count=len(reader_loads[k]))
+        load = g.add("load", f"rd{k}", stage="reader", worker=k,
+                     indices=reader_loads[k])
+        g.connect(addr, load, capacity=queue_capacity)
+        readers.append(load)
+
+    out_idx: list[list[int]] = []
+    min_caps: dict[int, int] = {}
+    tails: list[Node] = []
+    for c in range(w):
+        cols_c = list(range(rx + c, nx - rx, w))
+        n_cols = len(cols_c)
+        out_idx.append([j0 * nx + i for j0 in range(ry, ny - ry) for i in cols_c])
+
+        # --- x-dimension chain: 2rx+1 taps from 2rx+1 different readers.
+        # centre tap carries the full centre coefficient (cy centre + cx centre).
+        prev: Node | None = None
+        for j in range(2 * rx + 1):
+            coeff = float(cx[j]) + (float(cy[ry]) if j == rx else 0.0)
+            lead = (c + j) // w
+            keep = _make_keep_2d(lead, n_cols, ncpr, row_lo=ry, n_rows=n_rows)
+            f = g.add("filter", f"fx_w{c}_t{j}", stage="compute", worker=c,
+                      m=lead, n=n_cols, row_lo=ry, keep=keep)
+            g.connect(readers[(c + j) % w], f, capacity=queue_capacity)
+            op = "mul" if prev is None else "mac"
+            pe = g.add(op, f"{op}x_w{c}_t{j}", stage="compute", worker=c,
+                       coeff=coeff)
+            if prev is not None:
+                g.connect(prev, pe, port=0, capacity=queue_capacity)
+            e = g.connect(f, pe, port=(0 if prev is None else 1),
+                          capacity=queue_capacity)
+            # x values arrive ry rows ahead of the slowest y tap.
+            min_caps[id(e)] = ry * n_cols + 2 * rx + 2
+            prev = pe
+        x_tail = prev
+
+        # --- y-dimension chain: 2ry taps, all from the column-owning reader
+        # (paper: "all MUL/MAC's input comes from only one particular reader").
+        kc = (rx + c) % w
+        lead = (rx + c) // w
+        prev = None
+        for j in [jj for jj in range(2 * ry + 1) if jj != ry]:
+            keep = _make_keep_2d(lead, n_cols, ncpr, row_lo=j, n_rows=n_rows)
+            f = g.add("filter", f"fy_w{c}_t{j}", stage="compute", worker=c,
+                      m=lead, n=n_cols, row_lo=j, keep=keep)
+            g.connect(readers[kc], f, capacity=queue_capacity)
+            op = "mul" if prev is None else "mac"
+            pe = g.add(op, f"{op}y_w{c}_t{j}", stage="compute", worker=c,
+                       coeff=float(cy[j]))
+            if prev is not None:
+                g.connect(prev, pe, port=0, capacity=queue_capacity)
+            e = g.connect(f, pe, port=(0 if prev is None else 1),
+                          capacity=queue_capacity)
+            # mandatory buffering (§III-B): tap at row_lo=j lags the reader by
+            # (2ry - j) rows -> that many rows of this worker's columns queue up.
+            min_caps[id(e)] = (2 * ry - j) * n_cols + 2
+            prev = pe
+        y_tail = prev
+
+        addn = g.add("add", f"xy_add_w{c}", stage="compute", worker=c)
+        ex = g.connect(x_tail, addn, port=0, capacity=queue_capacity)
+        min_caps[id(ex)] = ry * n_cols + 2   # x outputs lead y by ry rows
+        g.connect(y_tail, addn, port=1, capacity=queue_capacity)
+        tails.append(addn)
+
+    syncs = _attach_writers(g, tails, out_idx, queue_capacity)
+    done = g.add("cmp", "done", stage="sync", worker=-1)
+    for s in syncs:
+        g.connect(s, done, capacity=queue_capacity)
+
+    if auto_capacity:
+        _apply_min_caps(g, min_caps)
+    buf = 2 * ry * nx
+    return MappingPlan(
+        spec=spec, workers=w, dfg=g, reader_loads=reader_loads,
+        writer_stores=out_idx, sync_expect=[len(o) for o in out_idx],
+        pe_counts=g.pe_counts(), mac_pes=g.mac_pes(), min_capacities=min_caps,
+        notes=(f"2D: {w} workers x ({4*max(ry,rx)} MAC + 1 MUL + ADD); mandatory "
+               f"buffering ~= 2*ry*nx = {buf} elements across queues"))
+
+
+# ---------------------------------------------------------------------------
+def _attach_writers(g: DFG, tails: list[Node], out_idx: list[list[int]],
+                    qc: int | None) -> list[Node]:
+    syncs = []
+    for c, tail in enumerate(tails):
+        addr = g.add("addr", f"wr_addr{c}", stage="writer", worker=c,
+                     count=len(out_idx[c]))
+        st = g.add("store", f"wr{c}", stage="writer", worker=c,
+                   indices=out_idx[c])
+        g.connect(addr, st, port=0, capacity=qc)
+        g.connect(tail, st, port=1, capacity=qc)
+        sy = g.add("sync", f"sync{c}", stage="sync", worker=c,
+                   expected=len(out_idx[c]))
+        g.connect(st, sy, capacity=qc)
+        syncs.append(sy)
+    return syncs
+
+
+def _make_keep_1d(lead: int, n: int) -> Callable[[int], bool]:
+    return lambda k: lead <= k < lead + n
+
+
+def _make_keep_2d(lead: int, n_cols: int, ncpr: int, row_lo: int,
+                  n_rows: int) -> Callable[[int], bool]:
+    def keep(k: int) -> bool:
+        t, pos = divmod(k, ncpr)
+        return (row_lo <= t < row_lo + n_rows) and (lead <= pos < lead + n_cols)
+    return keep
+
+
+def _apply_min_caps(g: DFG, min_caps: dict[int, int]) -> None:
+    for e in g.edges():
+        if id(e) in min_caps:
+            e.capacity = min_caps[id(e)]
+        elif e.capacity is None:
+            e.capacity = 4
+
+
+# ---------------------------------------------------------------------------
+# Strip-mining / blocking planner (§III-B "Blocking") — also reused by the TPU
+# kernels to pick BlockSpec tiles under a VMEM budget.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    block_shape: tuple[int, ...]
+    halo: tuple[int, ...]
+    grid: tuple[int, ...]               # number of blocks per axis
+    working_set_bytes: int
+    storage_budget_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.working_set_bytes <= self.storage_budget_bytes
+
+
+def plan_blocks(spec: StencilSpec, storage_budget_bytes: int,
+                lane_multiple: int = 128) -> BlockPlan:
+    """Choose per-axis block sizes so (block + 2*halo) working sets fit the
+    on-fabric storage (CGRA scratchpad or TPU VMEM).
+
+    Strategy (paper: vertical strips sized so ``2*ry*block_size`` fits):
+    keep the innermost axis in lane_multiple chunks as large as possible,
+    then grow outer axes.
+    """
+    halo = tuple(r * spec.timesteps for r in spec.radii)
+    b = spec.bytes_per_elem
+    shape = list(spec.grid_shape)
+    block = [min(s, 8) for s in shape]
+    block[-1] = min(shape[-1], lane_multiple)
+
+    def ws(blk):  # in + out working set with halos
+        inner = math.prod(bb + 2 * h for bb, h in zip(blk, halo))
+        return (inner + math.prod(blk)) * b
+
+    # grow innermost first, then outer axes round-robin
+    order = list(range(spec.ndim - 1, -1, -1))
+    progress = True
+    while progress:
+        progress = False
+        for ax in order:
+            step = lane_multiple if ax == spec.ndim - 1 else 8
+            cand = list(block)
+            cand[ax] = min(shape[ax], cand[ax] + step)
+            if cand[ax] != block[ax] and ws(cand) <= storage_budget_bytes:
+                block = cand
+                progress = True
+    grid = tuple(math.ceil(s / bb) for s, bb in zip(shape, block))
+    return BlockPlan(tuple(block), halo, grid, ws(block), storage_budget_bytes)

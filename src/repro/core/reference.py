@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for star stencils (any rank, any radius, fused timesteps).
+
+This is the semantic ground truth every other implementation (CGRA simulator,
+Pallas kernels, halo-exchanged distributed version) is tested against.
+
+Boundary convention: outputs are computed only where the stencil has full
+support; the ``radius``-wide rim of the output grid is zero.  This matches the
+paper's data-filtering discipline (boundary values are *dropped*, §III-A) and
+keeps single-device and halo-exchanged results bit-comparable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import StencilSpec
+
+
+def _shift(x: jax.Array, offset: int, axis: int) -> jax.Array:
+    """x shifted by ``offset`` along ``axis`` with zero fill (jnp.roll minus wrap)."""
+    if offset == 0:
+        return x
+    n = x.shape[axis]
+    pad = [(0, 0)] * x.ndim
+    if offset > 0:  # tap at i+offset -> pull data left
+        pad[axis] = (0, offset)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(offset, offset + n)
+    else:
+        pad[axis] = (-offset, 0)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(0, n)
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+def _interior_mask(shape: tuple[int, ...], radii: tuple[int, ...],
+                   steps: int) -> np.ndarray:
+    mask = np.ones(shape, dtype=bool)
+    for ax, r in enumerate(radii):
+        if r * steps == 0:
+            continue
+        idx = np.arange(shape[ax])
+        ok = (idx >= r * steps) & (idx < shape[ax] - r * steps)
+        mask &= np.expand_dims(ok, tuple(i for i in range(len(shape)) if i != ax))
+    return mask
+
+
+def stencil_sweep(x: jax.Array, spec: StencilSpec) -> jax.Array:
+    """One star-stencil sweep; no boundary masking (callers mask)."""
+    acc = jnp.zeros_like(x)
+    for ax, (r, coeffs) in enumerate(zip(spec.radii, spec.coeffs)):
+        for k, c in enumerate(coeffs):
+            if c == 0.0:
+                continue
+            acc = acc + jnp.asarray(c, x.dtype) * _shift(x, k - r, ax)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def stencil_reference(x: jax.Array, spec: StencilSpec) -> jax.Array:
+    """``spec.timesteps`` fused sweeps with support-only outputs.
+
+    After step t, only points with distance >= r*(t+1) from every face hold
+    valid values; everything else is zeroed so that invalid values never
+    propagate into the valid region's support.
+
+    Returns an array of ``spec.grid_shape`` whose interior (shrunk by
+    r*timesteps per face) is valid and whose rim is zero.
+    """
+    out = x
+    for t in range(spec.timesteps):
+        out = stencil_sweep(out, spec)
+        mask = _interior_mask(spec.grid_shape, spec.radii, t + 1)
+        out = jnp.where(jnp.asarray(mask), out, jnp.zeros_like(out))
+    return out
+
+
+def stencil_reference_np(x: np.ndarray, spec: StencilSpec) -> np.ndarray:
+    """numpy twin of :func:`stencil_reference` (used by the CGRA simulator
+    tests where we want no jax involvement at all)."""
+    out = x.astype(np.float64 if spec.dtype == "float64" else np.float32)
+    for t in range(spec.timesteps):
+        acc = np.zeros_like(out)
+        for ax, (r, coeffs) in enumerate(zip(spec.radii, spec.coeffs)):
+            for k, c in enumerate(coeffs):
+                if c == 0.0:
+                    continue
+                acc += c * np.asarray(_np_shift(out, k - r, ax))
+        mask = _interior_mask(spec.grid_shape, spec.radii, t + 1)
+        out = np.where(mask, acc, 0.0)
+    return out
+
+
+def _np_shift(x: np.ndarray, offset: int, axis: int) -> np.ndarray:
+    if offset == 0:
+        return x
+    y = np.zeros_like(x)
+    src = [slice(None)] * x.ndim
+    dst = [slice(None)] * x.ndim
+    if offset > 0:
+        src[axis] = slice(offset, None)
+        dst[axis] = slice(0, x.shape[axis] - offset)
+    else:
+        src[axis] = slice(0, x.shape[axis] + offset)
+        dst[axis] = slice(-offset, None)
+    y[tuple(dst)] = x[tuple(src)]
+    return y

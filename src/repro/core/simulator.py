@@ -1,0 +1,208 @@
+"""Cycle-level CGRA simulator (paper §VIII).
+
+Models a triggered-instruction fabric: every node (= instruction mapped to a
+PE) *fires* in a cycle iff all its input queues hold data and all its output
+queues have space — exactly the TIA firing rule [Parashar et al., IEEE Micro
+'14].  Loads/stores additionally arbitrate for a shared memory-bandwidth
+budget (``bw_gbps / clock / bytes_per_elem`` element-ops per cycle, fractional
+credit carried across cycles).
+
+The simulator *executes the numerics*: it produces the output grid, so every
+mapping is validated end-to-end against ``core.reference`` — not just timed.
+
+Synchronous two-phase semantics: firing decisions for cycle t use queue state
+at the start of t (push+pop on the same queue in one cycle is allowed, as in
+real hardware FIFOs; a push into a queue that was full at cycle start is not).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dfg import DFG, FLOPS_PER_OP, Node
+from repro.core.mapping import MappingPlan
+from repro.core.roofline import Machine, analyze
+
+
+class SimDeadlock(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    flops: int
+    loads: int
+    stores: int
+    fires: dict[str, int]
+    output: np.ndarray
+    gflops: float
+    pct_of_roofline: float
+    pct_of_compute_peak: float
+    max_queue_total: int
+    mac_pes: int
+
+    def summary(self) -> str:
+        return (f"cycles={self.cycles} flops={self.flops} "
+                f"GFLOPS={self.gflops:.1f} roofline%={self.pct_of_roofline:.1%} "
+                f"loads={self.loads} stores={self.stores} macPEs={self.mac_pes}")
+
+
+def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
+             max_cycles: int = 50_000_000,
+             mem_efficiency: float = 1.0) -> SimResult:
+    """``mem_efficiency`` derates the memory-port bandwidth to model cache
+    conflict misses (the paper observed "more conflict misses in the cache
+    for stencil 2D" — its cycle-accurate 2D result corresponds to ~0.80;
+    our queue model is ideal at 1.0).  See EXPERIMENTS.md §Paper-validation.
+    """
+    spec = plan.spec
+    g = plan.dfg
+    flat_in = np.asarray(x, dtype=np.float64).reshape(-1)
+    flat_out = np.zeros(int(np.prod(spec.grid_shape)), dtype=np.float64)
+
+    # per-node runtime state ---------------------------------------------------
+    state: dict[int, dict] = {}
+    done_node: Node | None = None
+    for nd in g.nodes:
+        st: dict = {"k": 0}
+        if nd.op == "sync":
+            st["count"] = 0
+            st["emitted"] = False
+        state[nd.nid] = st
+        if nd.name == "done":
+            done_node = nd
+    assert done_node is not None
+
+    elems_per_cycle = mem_efficiency * machine.bw_gbps / machine.clock_ghz / (
+        8 if spec.dtype == "float64" else spec.bytes_per_elem)
+    credit = 0.0
+    cycles = 0
+    fires: dict[str, int] = {}
+    loads = stores = flops = 0
+    finished = False
+
+    # memory ops arbitrate for bandwidth with *rotating* priority (fair
+    # round-robin, like the CGRA's memory-port arbiter); everything else is
+    # order-independent because eligibility is snapshotted per cycle.
+    mem_nodes = [nd for nd in g.nodes if nd.op in ("load", "store")]
+    other_nodes = [nd for nd in g.nodes if nd.op not in ("load", "store")]
+    n_mem = max(1, len(mem_nodes))
+
+    nodes = g.nodes
+    while not finished:
+        if cycles >= max_cycles:
+            raise SimDeadlock(f"exceeded max_cycles={max_cycles}")
+        cycles += 1
+        credit = min(credit + elems_per_cycle, 4 * elems_per_cycle)
+        # phase 1: snapshot eligibility -----------------------------------
+        in_avail = {}
+        out_free = {}
+        for nd in nodes:
+            in_avail[nd.nid] = all(e.q for e in nd.in_edges)
+            out_free[nd.nid] = all(not e.full() for e in nd.out_edges)
+        any_fired = False
+        # phase 2: execute. Memory nodes first in rotated order (fair
+        # bandwidth arbitration), then the rest.
+        rot = cycles % n_mem
+        ordered = mem_nodes[rot:] + mem_nodes[:rot] + other_nodes
+        for nd in ordered:
+            st = state[nd.nid]
+            op = nd.op
+            if op == "addr":
+                if st["k"] >= nd.params["count"] or not out_free[nd.nid]:
+                    continue
+                v = st["k"]
+                st["k"] += 1
+            elif op == "load":
+                if not (in_avail[nd.nid] and out_free[nd.nid] and credit >= 1.0):
+                    continue
+                a = nd.in_edges[0].q.popleft()
+                v = float(flat_in[nd.params["indices"][a]])
+                credit -= 1.0
+                loads += 1
+            elif op == "store":
+                if not (in_avail[nd.nid] and out_free[nd.nid] and credit >= 1.0):
+                    continue
+                a = nd.in_edges[0].q.popleft()
+                val = nd.in_edges[1].q.popleft()
+                flat_out[nd.params["indices"][a]] = val
+                credit -= 1.0
+                stores += 1
+                v = 1  # done token to sync
+            elif op == "filter":
+                if not in_avail[nd.nid]:
+                    continue
+                keep = nd.params["keep"](st["k"])
+                if keep and not out_free[nd.nid]:
+                    continue  # must hold the token until downstream has space
+                tok = nd.in_edges[0].q.popleft()
+                st["k"] += 1
+                if not keep:
+                    fires[op] = fires.get(op, 0) + 1
+                    any_fired = True
+                    continue
+                v = tok
+            elif op == "mul":
+                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                    continue
+                v = nd.params["coeff"] * nd.in_edges[0].q.popleft()
+                flops += 1
+            elif op == "mac":
+                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                    continue
+                p = nd.in_edges[0].q.popleft()
+                v = p + nd.params["coeff"] * nd.in_edges[1].q.popleft()
+                flops += 2
+            elif op == "add":
+                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                    continue
+                v = nd.in_edges[0].q.popleft() + nd.in_edges[1].q.popleft()
+                flops += 1
+            elif op == "sync":
+                if st["emitted"] or not in_avail[nd.nid]:
+                    continue
+                nd.in_edges[0].q.popleft()
+                st["count"] += 1
+                fires[op] = fires.get(op, 0) + 1
+                any_fired = True
+                if st["count"] == nd.params["expected"] and out_free[nd.nid]:
+                    st["emitted"] = True
+                    v = 1
+                else:
+                    continue
+            elif op == "cmp":  # the final done-combiner
+                if not in_avail[nd.nid]:
+                    continue
+                for e in nd.in_edges:
+                    e.q.popleft()
+                finished = True
+                fires[op] = fires.get(op, 0) + 1
+                any_fired = True
+                continue
+            else:  # mux/demux/copy pass-through
+                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                    continue
+                v = nd.in_edges[0].q.popleft()
+            nd.fires += 1
+            fires[op] = fires.get(op, 0) + 1
+            any_fired = True
+            for e in nd.out_edges:
+                e.push(v)
+        if not any_fired and not finished:
+            stuck = [f"{nd.name}({nd.op}) in={[len(e.q) for e in nd.in_edges]} "
+                     f"outfull={[e.full() for e in nd.out_edges]}"
+                     for nd in nodes if any(e.q for e in nd.in_edges)][:8]
+            raise SimDeadlock(
+                f"deadlock at cycle {cycles}; sample blocked nodes: {stuck}")
+
+    gflops = (flops / cycles) * machine.clock_ghz
+    roof = analyze(spec, machine, workers=plan.workers)
+    max_q = sum(e.max_occupancy for e in g.edges())
+    return SimResult(
+        cycles=cycles, flops=flops, loads=loads, stores=stores, fires=fires,
+        output=flat_out.reshape(spec.grid_shape), gflops=gflops,
+        pct_of_roofline=gflops / roof.achievable_gflops,
+        pct_of_compute_peak=gflops / machine.peak_gflops,
+        max_queue_total=max_q, mac_pes=plan.mac_pes)

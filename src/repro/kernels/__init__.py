@@ -1,0 +1,14 @@
+"""TPU Pallas kernels for the paper's compute hot-spots.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(public jit'd wrapper with padding/planning/backend dispatch), ``ref.py``
+(pure-jnp oracle used by the tests' allclose sweeps).
+"""
+from repro.kernels.conv1d.ops import causal_conv1d
+from repro.kernels.stencil1d.ops import stencil1d, stencil1d_from_spec
+from repro.kernels.stencil2d.ops import stencil2d, stencil2d_from_spec
+from repro.kernels.stencil3d.ops import stencil3d
+from repro.kernels.swa.ops import sliding_window_attention
+
+__all__ = ["causal_conv1d", "stencil1d", "stencil1d_from_spec", "stencil2d",
+           "stencil2d_from_spec", "stencil3d", "sliding_window_attention"]

@@ -1,0 +1,33 @@
+"""Public entry point for depthwise causal conv1d."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv1d.kernel import conv1d_pallas
+from repro.kernels.conv1d.ref import conv1d_ref
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                  backend: str = "auto", block_s: int = 256,
+                  block_c: int = 128) -> jax.Array:
+    """x: (B, S, C); w: (K, C); optional bias (C,)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return conv1d_ref(x, w, b)
+
+    interpret = jax.default_backend() != "tpu"
+    bs, s, c = x.shape
+    kk = w.shape[0]
+    block_s = max(block_s, kk - 1)
+    ps = (-s) % block_s
+    pc = (-c) % block_c
+    xp = jnp.pad(x, ((0, 0), (0, ps), (0, pc)))
+    wp = jnp.pad(w, ((0, 0), (0, pc)))
+    y = conv1d_pallas(xp, wp, block_s=block_s, block_c=block_c,
+                      interpret=interpret)[:, :s, :c]
+    if b is not None:
+        y = (y.astype(jnp.float32) + b[None, None, :].astype(jnp.float32)
+             ).astype(x.dtype)
+    return y

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for depthwise *causal* 1D convolution.
+
+``y[b, s, c] = sum_k w[k, c] * x[b, s - K + 1 + k, c]``  (left zero padding),
+optionally + bias.  This is a radius-(K-1) one-sided sequence stencil with
+learned per-channel taps — the temporal-conv block of Griffin/RG-LRU and the
+Whisper conv stem use exactly this shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def conv1d_ref(x: jax.Array, w: jax.Array,
+               b: jax.Array | None = None) -> jax.Array:
+    """x: (B, S, C); w: (K, C); b: (C,) or None."""
+    kk = w.shape[0]
+    acc_dtype = jnp.float32
+    out = jnp.zeros(x.shape, acc_dtype)
+    for k in range(kk):
+        shift = kk - 1 - k          # tap k reads x[s - shift]
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1], :]
+        out = out + xs.astype(acc_dtype) * w[k][None, None, :].astype(acc_dtype)
+    if b is not None:
+        out = out + b[None, None, :].astype(acc_dtype)
+    return out.astype(x.dtype)

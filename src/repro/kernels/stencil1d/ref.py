@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the batched 1D star stencil.
+
+Semantics: ``out[b, i] = sum_k coeffs[k] * x[b, i - r + k]`` for positions with
+full support after ``timesteps`` fused sweeps; everything else is zero (the
+paper's boundary-drop discipline).  Matches ``repro.core.reference`` for
+batch=1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs", "timesteps"))
+def stencil1d_ref(x: jax.Array, coeffs: tuple[float, ...],
+                  timesteps: int = 1) -> jax.Array:
+    """x: (..., N) -> (..., N); stencil along the last axis."""
+    r = (len(coeffs) - 1) // 2
+    n = x.shape[-1]
+    out = x
+    acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+    for t in range(1, timesteps + 1):
+        o = jnp.zeros(out.shape, acc_dtype)
+        for k, c in enumerate(coeffs):
+            off = k - r
+            if c == 0.0:
+                continue
+            shifted = _shift_last(out.astype(acc_dtype), off)
+            o = o + jnp.asarray(c, acc_dtype) * shifted
+        idx = jnp.arange(n)
+        valid = (idx >= r * t) & (idx < n - r * t)
+        out = jnp.where(valid, o, 0.0).astype(x.dtype)
+    return out
+
+
+def _shift_last(x: jax.Array, off: int) -> jax.Array:
+    if off == 0:
+        return x
+    n = x.shape[-1]
+    pad = [(0, 0)] * (x.ndim - 1)
+    if off > 0:
+        return jnp.pad(x, pad + [(0, off)])[..., off:off + n]
+    return jnp.pad(x, pad + [(-off, 0)])[..., :n]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the batched 2D star stencil.
+
+``out[..., j, i] = sum_a cy[a] * x[..., j-ry+a, i] + sum_b cx[b] * x[..., j, i-rx+b]``
+on fully-supported positions after ``timesteps`` fused sweeps; zero elsewhere.
+Axis convention follows the paper: axis -2 = y (rows, ``j``), axis -1 = x
+(cols, ``i``).  cy carries the (single) centre coefficient; cx's centre entry
+is normally zero (see core.spec).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("cy", "cx", "timesteps"))
+def stencil2d_ref(x: jax.Array, cy: tuple[float, ...], cx: tuple[float, ...],
+                  timesteps: int = 1) -> jax.Array:
+    ry = (len(cy) - 1) // 2
+    rx = (len(cx) - 1) // 2
+    ny, nx = x.shape[-2], x.shape[-1]
+    acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+    out = x
+    for t in range(1, timesteps + 1):
+        xo = out.astype(acc_dtype)
+        o = jnp.zeros(out.shape, acc_dtype)
+        for a, c in enumerate(cy):
+            if c != 0.0:
+                o = o + jnp.asarray(c, acc_dtype) * _shift(xo, a - ry, -2)
+        for b, c in enumerate(cx):
+            if c != 0.0:
+                o = o + jnp.asarray(c, acc_dtype) * _shift(xo, b - rx, -1)
+        jj = jnp.arange(ny)[:, None]
+        ii = jnp.arange(nx)[None, :]
+        valid = ((jj >= ry * t) & (jj < ny - ry * t) &
+                 (ii >= rx * t) & (ii < nx - rx * t))
+        out = jnp.where(valid, o, 0.0).astype(x.dtype)
+    return out
+
+
+def _shift(x: jax.Array, off: int, axis: int) -> jax.Array:
+    if off == 0:
+        return x
+    n = x.shape[axis]
+    axis = axis % x.ndim
+    pad = [(0, 0)] * x.ndim
+    sl = [slice(None)] * x.ndim
+    if off > 0:
+        pad[axis] = (0, off)
+        sl[axis] = slice(off, off + n)
+    else:
+        pad[axis] = (-off, 0)
+        sl[axis] = slice(0, n)
+    return jnp.pad(x, pad)[tuple(sl)]

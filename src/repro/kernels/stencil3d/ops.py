@@ -1,0 +1,53 @@
+"""Public entry point for the 3D stencil.
+
+``timesteps > 1`` runs T separate sweeps (each a Pallas call): fused-T 3D
+star sweeps have diamond composite support and would need all 26 corner
+views; the HBM round trip between sweeps is the documented trade (the CGRA/
+1D/2D paths fuse in-fabric per §IV).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stencil3d.kernel import stencil3d_pallas
+from repro.kernels.stencil3d.ref import stencil3d_ref
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def stencil3d(x: jax.Array, cz, cy, cx, *, timesteps: int = 1,
+              backend: str = "auto",
+              block: tuple[int, int, int] = (8, 16, 128)) -> jax.Array:
+    """Batched 3D star stencil over the last three axes (z, y, x)."""
+    cz = tuple(float(c) for c in cz)
+    cy = tuple(float(c) for c in cy)
+    cx = tuple(float(c) for c in cx)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return stencil3d_ref(x, cz, cy, cx, timesteps=timesteps)
+
+    interpret = jax.default_backend() != "tpu"
+    lead = x.shape[:-3]
+    nz, ny, nx = x.shape[-3:]
+    xb = x.reshape((-1, nz, ny, nx))
+    bz, by, bx = block
+    pz, py, px = (_next_multiple(nz, bz) - nz, _next_multiple(ny, by) - ny,
+                  _next_multiple(nx, bx) - nx)
+    xp = jnp.pad(xb, ((0, 0), (0, pz), (0, py), (0, px)))
+    rz, ry, rx = ((len(c) - 1) // 2 for c in (cz, cy, cx))
+    zz = jnp.arange(xp.shape[-3])[:, None, None]
+    yy = jnp.arange(xp.shape[-2])[None, :, None]
+    xx = jnp.arange(xp.shape[-1])[None, None, :]
+    out = xp
+    for t in range(1, timesteps + 1):
+        out = stencil3d_pallas(out, cz, cy, cx, block=block,
+                               interpret=interpret)
+        valid = ((zz >= rz * t) & (zz < nz - rz * t) &
+                 (yy >= ry * t) & (yy < ny - ry * t) &
+                 (xx >= rx * t) & (xx < nx - rx * t))
+        out = jnp.where(valid, out, 0).astype(out.dtype)
+    return out[:, :nz, :ny, :nx].reshape(*lead, nz, ny, nx)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the batched 3D star stencil (paper §VII's comparison
+workload; §III-B: "This design can be extended to 3D as well").
+
+``out[..., z, y, x] = sum_a cz[a]·in[z-rz+a, y, x] + sum_b cy[b]·in[z, y-ry+b, x]
+                      + sum_c cx[c]·in[z, y, x-rx+c]``
+on fully-supported positions after ``timesteps`` fused sweeps; zero rim.
+cz carries the centre coefficient; cy/cx centres are normally zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("cz", "cy", "cx", "timesteps"))
+def stencil3d_ref(x: jax.Array, cz: tuple[float, ...], cy: tuple[float, ...],
+                  cx: tuple[float, ...], timesteps: int = 1) -> jax.Array:
+    rz, ry, rx = ((len(c) - 1) // 2 for c in (cz, cy, cx))
+    nz, ny, nx = x.shape[-3], x.shape[-2], x.shape[-1]
+    acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+    out = x
+    for t in range(1, timesteps + 1):
+        xo = out.astype(acc_dtype)
+        o = jnp.zeros(out.shape, acc_dtype)
+        for axis, (r, coeffs) in zip((-3, -2, -1),
+                                     ((rz, cz), (ry, cy), (rx, cx))):
+            for k, c in enumerate(coeffs):
+                if c != 0.0:
+                    o = o + jnp.asarray(c, acc_dtype) * _shift(xo, k - r, axis)
+        zz = jnp.arange(nz)[:, None, None]
+        yy = jnp.arange(ny)[None, :, None]
+        xx = jnp.arange(nx)[None, None, :]
+        valid = ((zz >= rz * t) & (zz < nz - rz * t) &
+                 (yy >= ry * t) & (yy < ny - ry * t) &
+                 (xx >= rx * t) & (xx < nx - rx * t))
+        out = jnp.where(valid, o, 0.0).astype(x.dtype)
+    return out
+
+
+def _shift(x: jax.Array, off: int, axis: int) -> jax.Array:
+    if off == 0:
+        return x
+    n = x.shape[axis]
+    axis = axis % x.ndim
+    pad = [(0, 0)] * x.ndim
+    sl = [slice(None)] * x.ndim
+    if off > 0:
+        pad[axis] = (0, off)
+        sl[axis] = slice(off, off + n)
+    else:
+        pad[axis] = (-off, 0)
+        sl[axis] = slice(0, n)
+    return jnp.pad(x, pad)[tuple(sl)]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for causal sliding-window (local) attention with GQA.
+
+``out[b,h,i] = softmax_j(q_i . k_j / sqrt(D)) @ v``  over keys
+``j in (i - window, i]`` (causal, window includes the current token).
+This is attention-as-a-sequence-stencil: a fixed-shape local dependency
+pattern of radius ``window-1`` behind each query (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def swa_ref_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int) -> jax.Array:
+    """Linear-memory XLA formulation: queries in window-sized chunks, each
+    attending to its (chunk + trailing-window) KV band — the strip-mined
+    stencil schedule (§III-B Blocking) applied to attention.  Identical
+    semantics to :func:`swa_ref`; used for long sequences where the dense
+    (S x S) mask would be quadratic."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    w = window
+    c = w                                     # chunk size = window
+    pad = (-s) % c
+    sp = s + pad
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(jnp.repeat(k, group, axis=1),
+                 ((0, 0), (0, 0), (w, pad), (0, 0)))
+    vp = jnp.pad(jnp.repeat(v, group, axis=1),
+                 ((0, 0), (0, 0), (w, pad), (0, 0)))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    outs = []
+    for i in range(sp // c):
+        qi = qp[:, :, i * c:(i + 1) * c].astype(jnp.float32) * scale
+        kwin = kp[:, :, i * c:i * c + c + w].astype(jnp.float32)
+        vwin = vp[:, :, i * c:i * c + c + w].astype(jnp.float32)
+        logits = jnp.einsum("bhid,bhjd->bhij", qi, kwin)
+        qpos = i * c + jnp.arange(c)[:, None]
+        kpos = i * c - w + jnp.arange(c + w)[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - w) & (kpos >= 0) & (kpos < s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        p = jnp.where(jnp.any(mask, -1, keepdims=True), p, 0.0)
+        # probs and PV run in the input dtype (bf16 in production configs):
+        # halves the dominant byte traffic of the window band (§Perf cell C).
+        outs.append(jnp.einsum("bhij,bhjd->bhid", p.astype(q.dtype),
+                               vwin.astype(q.dtype)))
+    out = jnp.concatenate(outs, axis=2)[:, :, :s]
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def swa_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            window: int) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) & (j > i - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhij,bhjd->bhid", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,189 @@
+"""Attention: GQA/MQA, qk-norm, RoPE/M-RoPE, full-causal or sliding-window,
+bidirectional (encoder) and cross (decoder) variants, with KV caches.
+
+Sliding-window layers are the LM-side home of the paper's stencil technique:
+on TPU the local-attention prefill dispatches to ``kernels/swa`` (stencil
+reuse on the MXU); under jit on CPU and in the dry-run it uses the same-math
+XLA path.  Decode uses a ring-buffer KV cache bounded by the window — the
+"mandatory buffering" of §III-B applied to sequence state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.swa.ops import sliding_window_attention
+from repro.models.common import apply_rope, mrope_angles, rmsnorm, rmsnorm_spec, rope_angles
+from repro.models.params import Spec
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg: ArchConfig, *, kv_heads: int | None = None) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    kv = kv_heads if kv_heads is not None else cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    specs = {
+        "wq": Spec((d, h, hd), ("fsdp", "heads", "head_dim")),
+        "wk": Spec((d, kv, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        specs |= {"bq": Spec((h, hd), ("heads", "head_dim"), init="zeros"),
+                  "bk": Spec((kv, hd), ("kv_heads", "head_dim"), init="zeros"),
+                  "bv": Spec((kv, hd), ("kv_heads", "head_dim"), init="zeros")}
+    if cfg.qk_norm:
+        specs |= {"q_norm": rmsnorm_spec(hd), "k_norm": rmsnorm_spec(hd)}
+    return specs
+
+
+class KVCache(NamedTuple):
+    """k/v: (B, Hkv, C, hd); C = full seq for global layers, window for local.
+    ``pos``: next absolute write position (scalar int32)."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(batch: int, kv_heads: int, capacity: int, head_dim: int, dtype):
+        z = jnp.zeros((batch, kv_heads, capacity, head_dim), dtype)
+        return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def _project(p: dict, x: jax.Array, cfg: ArchConfig):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _rope_qk(q, k, cfg: ArchConfig, positions):
+    if cfg.rope_theta <= 0 or positions is None:
+        return q, k
+    hd = q.shape[-1]
+    if cfg.mrope_sections is not None:
+        cos, sin = mrope_angles(positions, hd, cfg.rope_theta,
+                                cfg.mrope_sections)
+    else:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def _sdpa(q, k, v, mask, group: int) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd); mask: (B,1,S,T) or None (full)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = qf.reshape(b, s, kv, group, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :, :, :] if mask.ndim == 4 else mask,
+                           logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    out = out.reshape(b, s, h, hd).astype(q.dtype)
+    return constrain(out, ("batch", None, "heads", None))
+
+
+def attend_full(p: dict, x: jax.Array, cfg: ArchConfig, *, positions,
+                causal: bool = True,
+                cross_kv: Optional[tuple[jax.Array, jax.Array]] = None):
+    """Training/prefill attention without cache. cross_kv supplies encoder
+    K/V for cross-attention (positions then only rotate q... whisper uses no
+    rope; cross_kv path skips rope entirely)."""
+    b, s, _ = x.shape
+    if cross_kv is None:
+        q, k, v = _project(p, x, cfg)
+        q, k = _rope_qk(q, k, cfg, positions)
+        if causal:
+            i = jnp.arange(s)[:, None]
+            j = jnp.arange(s)[None, :]
+            mask = (j <= i)[None, None, :, :]
+        else:
+            mask = None
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k, v = cross_kv
+        mask = None
+    out = _sdpa(q, k, v, mask, cfg.q_per_kv if cross_kv is None else
+                q.shape[2] // k.shape[2])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attend_local(p: dict, x: jax.Array, cfg: ArchConfig, *, positions):
+    """Sliding-window attention (stencil path). Uses kernels/swa."""
+    q, k, v = _project(p, x, cfg)
+    q, k = _rope_qk(q, k, cfg, positions)
+    out = sliding_window_attention(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        window=cfg.window)
+    out = jnp.moveaxis(out, 1, 2)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ----------------------------------------------------------------------------
+# single-token decode with caches
+# ----------------------------------------------------------------------------
+def decode_step(p: dict, x: jax.Array, cache: KVCache, cfg: ArchConfig, *,
+                window: int = 0, positions=None
+                ) -> tuple[jax.Array, KVCache]:
+    """x: (B, 1, D); returns (out (B,1,D), new cache).
+
+    Global layers write at ``pos``; local layers write at ``pos % window``
+    (ring buffer) and mask by recency — the §III-B line buffer in time.
+    """
+    b, s1, _ = x.shape
+    assert s1 == 1
+    q, k_new, v_new = _project(p, x, cfg)
+    pos = cache.pos
+    if positions is None:
+        pos_arr = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        pos_arr = positions
+    q, k_new = _rope_qk(q, k_new, cfg, pos_arr)
+
+    cap = cache.k.shape[2]
+    slot = (pos % window) if window else pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.swapaxes(1, 2),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.swapaxes(1, 2),
+                                     (0, 0, slot, 0))
+
+    idx = jnp.arange(cap)
+    if window:
+        # absolute position held by ring slot i = the latest write time t
+        # with t <= pos and t % window == i; negative -> never written.
+        abs_pos = pos - ((pos % window) - idx) % window
+        visible = abs_pos >= 0          # ring holds only the last `window`
+    else:
+        visible = idx <= pos
+    bias = jnp.where(visible, 0.0, NEG_INF)                 # (C,)
+
+    kv = k.shape[1]
+    group = q.shape[2] // kv
+    qf = (q.astype(jnp.float32) /
+          jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32)))
+    qg = qf.reshape(b, 1, kv, group, -1)
+    logits = jnp.einsum("bskgd,bktd->bkgst", qg, k.astype(jnp.float32))
+    logits = logits + bias[None, None, None, None, :]
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bskgd", pr, v.astype(jnp.float32))
+    out = out.reshape(b, 1, q.shape[2], q.shape[3]).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, KVCache(k, v, pos + 1)

@@ -1,0 +1,123 @@
+"""Shared model components: norms, activations, rotary embeddings (RoPE and
+M-RoPE), token embedding.  All pure functions over param dicts (see
+models/params.py for the spec system).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+def rmsnorm_spec(dim: int) -> Spec:
+    return Spec((dim,), (None,), init="ones", dtype="float32")
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layernorm_specs(dim: int) -> dict:
+    return {"scale": Spec((dim,), (None,), init="ones", dtype="float32"),
+            "bias": Spec((dim,), (None,), init="zeros", dtype="float32")}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+# ----------------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------------
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int, theta: float,
+                 sections: tuple[int, int, int]) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) (t/h/w components);
+    returns cos/sin (B, S, head_dim//2) where frequency slot f takes its
+    position component from the section it falls in (t|h|w interleaved
+    across the frequency axis per the M-RoPE layout)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)          # (half,)
+    # for each frequency slot, pick the position component of its section
+    pos = positions.astype(jnp.float32)                     # (3, B, S)
+    chosen = pos[sec_id, ...]                               # (half, B, S)
+    ang = jnp.moveaxis(chosen, 0, -1) * freqs               # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) (broadcast over heads).
+    Rotates the two halves (llama convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int, offset=0) -> jax.Array:
+    """Whisper-style fixed sinusoidal table: (seq, dim)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None] + offset
+    half = dim // 2
+    inv = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# embedding
+# ----------------------------------------------------------------------------
+def embed_spec(vocab: int, dim: int) -> Spec:
+    return Spec((vocab, dim), ("vocab", "fsdp"), init="embed", scale=0.02)
+
+
+def embed(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return table.astype(compute_dtype)[tokens]
+
+
+def unembed(table_or_w: jax.Array, x: jax.Array, *, tied: bool) -> jax.Array:
+    """Logits in fp32 (stable softmax/xent).
+
+    bf16 weights are consumed natively with fp32 accumulation — converting a
+    (V, D) table to fp32 every step costs 6 B/elem and dominated serving
+    byte traffic (§Perf cell B iteration 3).  fp32 master weights keep the
+    fp32 path (activations are the smaller operand there).
+    """
+    w = table_or_w
+    if w.dtype == jnp.bfloat16:
+        eq = "bsd,vd->bsv" if tied else "bsd,dv->bsv"
+        return jnp.einsum(eq, x.astype(jnp.bfloat16), w,
+                          preferred_element_type=jnp.float32)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if tied:
+        return jnp.einsum("bsd,vd->bsv", xf, wf)
+    return jnp.einsum("bsd,dv->bsv", xf, wf)

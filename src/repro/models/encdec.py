@@ -1,0 +1,159 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, encoder_seq, d_model) from input_specs().
+Encoder: bidirectional attention blocks with sinusoidal positions.
+Decoder: causal self-attention + cross-attention + MLP, sinusoidal positions
+(the real model's learned 448-position table is replaced so the assigned
+32k-decode shapes are expressible; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import params as pr
+from repro.models.attention import (KVCache, attention_specs, attend_full,
+                                    decode_step as attn_decode)
+from repro.models.common import (embed, embed_spec, rmsnorm, rmsnorm_spec,
+                                 sinusoidal_positions, unembed)
+from repro.models.mlp import mlp, mlp_specs
+from repro.models.params import Spec
+from repro.models.transformer import maybe_scan, stack_specs
+
+
+def _enc_block_specs(cfg: ArchConfig) -> dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "attn": attention_specs(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model), "mlp": mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg: ArchConfig) -> dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "self": attention_specs(cfg),
+            "lnx": rmsnorm_spec(cfg.d_model), "cross": attention_specs(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model), "mlp": mlp_specs(cfg)}
+
+
+class EncDecLM:
+    """Whisper-tiny-style backbone."""
+
+    def __init__(self, cfg: ArchConfig, force_unroll: bool = False):
+        self.cfg = cfg
+        self.force_unroll = force_unroll
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        return {
+            "embed": embed_spec(v, d),
+            "enc": stack_specs(_enc_block_specs(cfg), cfg.encoder_layers),
+            "enc_norm": rmsnorm_spec(d),
+            "dec": stack_specs(_dec_block_specs(cfg), cfg.num_layers),
+            "final_norm": rmsnorm_spec(d),
+        }
+
+    def init(self, key: jax.Array):
+        return pr.init_params(self.specs(), key, self.cfg.param_dtype)
+
+    # ---- encoder -----------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, T, D) stub embeddings -> encoder output (B, T, D)."""
+        cfg = self.cfg
+        pos = sinusoidal_positions(frames.shape[1], cfg.d_model)
+        h = frames.astype(jnp.dtype(cfg.dtype)) + pos.astype(cfg.dtype)[None]
+        h = constrain(h, ("batch", None, None))
+
+        def body(h, bp):
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            h = h + attend_full(bp["attn"], hn, cfg, positions=None,
+                                causal=False)
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(bp["mlp"], hn, cfg)
+            return h, None
+
+        h, _ = maybe_scan(body, h, params["enc"],
+                          force_unroll=self.force_unroll)
+        return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+    def _cross_kv(self, bp, enc_out):
+        k = jnp.einsum("btd,dhk->bthk", enc_out,
+                       bp["cross"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dhk->bthk", enc_out,
+                       bp["cross"]["wv"].astype(enc_out.dtype))
+        return k, v
+
+    # ---- decoder (teacher-forced / prefill logits) --------------------------
+    def forward(self, params, tokens: jax.Array, frames: jax.Array,
+                remat: str = "none") -> tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        pos = sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        h = embed(params["embed"], tokens, jnp.dtype(cfg.dtype)) + \
+            pos.astype(cfg.dtype)[None]
+        h = constrain(h, ("batch", None, None))
+
+        def body(h, bp):
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            h = h + attend_full(bp["self"], hn, cfg, positions=None,
+                                causal=True)
+            hn = rmsnorm(bp["lnx"], h, cfg.norm_eps)
+            h = h + attend_full(bp["cross"], hn, cfg, positions=None,
+                                cross_kv=self._cross_kv(bp, enc_out))
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(bp["mlp"], hn, cfg)
+            return h, None
+
+        fn = body
+        if remat in ("full", "dots"):
+            fn = jax.checkpoint(body, prevent_cse=False)
+        h, _ = maybe_scan(fn, h, params["dec"],
+                          force_unroll=self.force_unroll)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params["embed"], h, tied=True)
+        return logits, jnp.zeros((), jnp.float32)
+
+    # ---- decode ------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        hd = cfg.resolved_head_dim
+        one = KVCache.init(batch, cfg.num_kv_heads, cache_len, hd, dtype)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None],
+                                       (cfg.num_layers,) + x.shape).copy(), one)
+        # cross K/V computed once per request at prefill; stored stacked.
+        xk = jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                        cfg.num_kv_heads, hd), dtype)
+        return {"self": stacked, "cross_k": xk, "cross_v": xk}
+
+    def decode(self, params, cache, tokens: jax.Array,
+               *, positions=None) -> tuple[jax.Array, Any]:
+        cfg = self.cfg
+        pos_scalar = jax.tree.leaves(cache["self"])[-1][0]   # pos of layer 0
+        h = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        ptab = sinusoidal_positions(1, cfg.d_model, offset=pos_scalar)
+        h = h + ptab.astype(cfg.dtype)[None]
+
+        def body(h, xs):
+            bp, kv_cache, xk, xv = xs
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            y, kv_cache = attn_decode(bp["self"], hn, kv_cache, cfg,
+                                      positions=None)
+            h = h + y
+            hn = rmsnorm(bp["lnx"], h, cfg.norm_eps)
+            h = h + attend_full(bp["cross"], hn, cfg, positions=None,
+                                cross_kv=(xk, xv))
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(bp["mlp"], hn, cfg)
+            return h, kv_cache
+
+        h, new_self = maybe_scan(
+            body, h, (params["dec"], cache["self"], cache["cross_k"],
+                      cache["cross_v"]), force_unroll=self.force_unroll)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params["embed"], h, tied=True)
+        return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}

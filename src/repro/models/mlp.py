@@ -1,0 +1,132 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) dense MLP and GShard-style
+top-k MoE with capacity-factor dispatch (EP-shardable on the expert axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import activation
+from repro.models.params import Spec
+
+
+def mlp_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": Spec((d, f), ("fsdp", "mlp")),
+        "wi_up": Spec((d, f), ("fsdp", "mlp")),
+        "wo": Spec((f, d), ("mlp", "fsdp")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    act = activation(cfg.act)
+    g = constrain(jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype)),
+                  ("batch", None, "mlp"))
+    u = constrain(jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype)),
+                  ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", act(g) * u, p["wo"].astype(x.dtype))
+    return constrain(out, ("batch", None, None))
+
+
+# ----------------------------------------------------------------------------
+# MoE (GShard/Switch-style top-k with capacity; dropless-ish via capacity
+# factor; aux load-balance loss returned for the trainer)
+# ----------------------------------------------------------------------------
+def moe_specs(cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": Spec((d, e), ("fsdp", "experts"), scale=0.1),
+        "wi_gate": Spec((e, d, f), ("experts", "fsdp", "mlp")),
+        "wi_up": Spec((e, d, f), ("experts", "fsdp", "mlp")),
+        "wo": Spec((e, f, d), ("experts", "mlp", "fsdp")),
+    }
+
+
+def moe(p: dict, x: jax.Array, cfg: ArchConfig,
+        group_size: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_loss).  x: (B, S, D).
+
+    *Grouped* GShard dispatch: tokens are split into groups of ``group_size``
+    and each group routes independently with per-expert capacity
+    C = ceil(group * k / E * capacity_factor).  The (g, E, C) dispatch tensor
+    scales quadratically in the group size, so grouping bounds the dispatch
+    working set regardless of global batch (1M-token train_4k steps would
+    need a ~TB-scale flat dispatch otherwise).  Tokens over capacity are
+    dropped (standard GShard).  Group axis shards on (pod, data); experts on
+    model (EP).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+    act = activation(cfg.act)
+
+    g = min(group_size or cfg.moe_group_size, t)
+    pad = (-t) % g
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    ng = xt.shape[0] // g
+    xg = xt.reshape(ng, g, d)
+
+    xg = constrain(xg, ("batch", None, None))
+    logits = constrain(
+        jnp.einsum("Ggd,de->Gge", xg.astype(jnp.float32),
+                   p["router"].astype(jnp.float32)),
+        ("batch", None, "experts"))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, g, E)
+    gate_vals, choices = jax.lax.top_k(probs, k)             # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renormalize
+
+    # small groups (decode steps, smoke tests) run dropless — capacity only
+    # binds where it pays, at prefill/train group sizes.
+    cap = g if g <= 64 else max(1, min(g, int(g * k / e *
+                                              cfg.moe_capacity_factor)))
+    onehot = jax.nn.one_hot(choices, e, dtype=jnp.float32)   # (G, g, k, E)
+    flat = onehot.reshape(ng, g * k, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat               # queue position
+    pos = jnp.einsum("Ggke,Ggke->Ggk",
+                     pos_flat.reshape(ng, g, k, e), onehot)  # (G, g, k)
+    keep = (pos < cap).astype(jnp.float32)
+    gate_vals = gate_vals * keep
+
+    # the big (G,g,E,C)-shaped dispatch/combine tensors carry exact 0/1 (and
+    # bf16-rounded gate) values — ride the activation dtype, not fp32
+    # (§Perf cell A iteration 2).
+    dd = x.dtype
+    pos_oh = (jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+              * keep[..., None])
+    # the (G,g,E,C) dispatch/combine intermediates MUST be group-sharded —
+    # without the constraint the partitioner replicates them per device
+    # (~20 GB/layer at train_4k; §Perf cell A iteration 3).
+    dispatch = constrain(
+        jnp.einsum("Ggke,Ggkc->Ggec", onehot.astype(dd), pos_oh.astype(dd)),
+        ("batch", None, "experts", "expert_cap"))             # (G, g, E, C)
+    combine = constrain(
+        jnp.einsum("Ggec,Ggk,Ggke->Ggec", dispatch,
+                   gate_vals.astype(dd), onehot.astype(dd)),
+        ("batch", None, "experts", "expert_cap"))
+
+    # when E divides the model axis this shards experts (EP); otherwise the
+    # divisibility fallback lands on the *capacity* dim so MoE compute still
+    # splits across the model axis instead of replicating (granite-3b's 40
+    # experts; EXPERIMENTS.md §Perf cell A).
+    xe = constrain(jnp.einsum("Ggec,Ggd->Gecd", dispatch, xg),
+                   ("batch", "experts", "expert_cap", None))
+    gg = jnp.einsum("Gecd,edf->Gecf", xe, p["wi_gate"].astype(x.dtype))
+    uu = jnp.einsum("Gecd,edf->Gecf", xe, p["wi_up"].astype(x.dtype))
+    ye = constrain(jnp.einsum("Gecf,efd->Gecd", act(gg) * uu,
+                              p["wo"].astype(x.dtype)),
+                   ("batch", "experts", "expert_cap", None))
+    out = constrain(jnp.einsum("Ggec,Gecd->Ggd", combine, ye),
+                    ("batch", None, None))
+    out = out.reshape(-1, d)[:t].reshape(b, s, d)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))     # fraction routed
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e) / k
+    return out, aux.astype(jnp.float32)

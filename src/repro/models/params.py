@@ -1,0 +1,82 @@
+"""Parameter-spec trees: shapes + logical sharding axes, materialization-free.
+
+Models declare their parameters as trees of :class:`Spec` (shape, per-dim
+logical axis names, init recipe).  Three consumers:
+  * ``init_params``     — materialize real arrays (training, smoke tests);
+  * ``shape_tree``      — ``jax.ShapeDtypeStruct`` stand-ins (the dry-run
+                          lowers against these; nothing is allocated);
+  * ``logical_tree``    — feeds ``distributed.sharding.resolve_spec`` to build
+                          the in/out shardings for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "fan_in"        # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: str | None = None    # override (norm scales stay fp32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # convention: last dim is the output features; everything else is fan-in
+    return max(1, math.prod(shape[:-1]))
+
+
+def init_leaf(spec: Spec, key: jax.Array, default_dtype: str) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype or default_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(dtype)
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(dtype)
+    if spec.init == "fan_in":
+        std = spec.scale / np.sqrt(_fan_in(spec.shape))
+        return (std * jax.random.normal(key, spec.shape)).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(spec_tree, key: jax.Array, default_dtype: str = "float32"):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_tree(spec_tree, default_dtype: str = "float32"):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        spec_tree, is_leaf=is_spec)
+
+
+def logical_tree(spec_tree):
+    return jax.tree.map(lambda s: s.logical, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(spec_tree, is_leaf=is_spec))
+
+
+def param_bytes(spec_tree, default_dtype: str = "float32") -> int:
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype or default_dtype).itemsize
+               for s in jax.tree.leaves(spec_tree, is_leaf=is_spec))

@@ -1,0 +1,84 @@
+"""Model registry: ArchConfig -> model object + input builders.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the (arch x shape) cell — the dry-run lowers against these
+with no allocation.  ``input_arrays`` materializes small real inputs for
+smoke tests / examples with the same structure.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ArchConfig):
+    return EncDecLM(cfg) if cfg.family == "audio" else LM(cfg)
+
+
+def _mrope_positions_struct(b: int, s: int):
+    return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct tree for one dry-run cell.
+
+    train:   tokens + labels (+ stub patches / frames / mrope positions)
+    prefill: tokens (+ stubs)
+    decode:  one new token + the cache is supplied separately (see
+             launch/dryrun.py — caches come from model.init_cache shapes).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    one = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "audio":
+        frames = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok, "frames": frames}
+        if shape.kind == "prefill":
+            return {"tokens": tok, "frames": frames}
+        return {"tokens": one}
+
+    out: dict[str, Any] = {}
+    if shape.kind == "train":
+        out = {"tokens": tok, "labels": tok}
+    elif shape.kind == "prefill":
+        out = {"tokens": tok}
+    else:
+        out = {"tokens": one}
+
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), dt)
+        out["positions"] = _mrope_positions_struct(b, s)
+    elif cfg.family == "vlm":
+        out["positions"] = _mrope_positions_struct(b, 1)
+    return out
+
+
+def input_arrays(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0
+                 ) -> dict[str, Any]:
+    """Small real inputs with the cell's structure (for smoke tests the
+    caller passes a reduced cfg + reduced ShapeSpec)."""
+    rng = np.random.default_rng(seed)
+    structs = input_specs(cfg, shape)
+    out = {}
+    for name, sd in structs.items():
+        if sd.dtype == jnp.int32 and name in ("tokens", "labels"):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=sd.shape), jnp.int32)
+        elif name == "positions":
+            s = sd.shape[-1]
+            pos = np.broadcast_to(np.arange(s), sd.shape).copy()
+            out[name] = jnp.asarray(pos, jnp.int32)
+        else:
+            out[name] = jnp.asarray(rng.normal(size=sd.shape) * 0.02, sd.dtype)
+    return out

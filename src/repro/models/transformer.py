@@ -1,0 +1,308 @@
+"""Decoder-only LM stack covering the dense / moe / hybrid / ssm / vlm
+families.
+
+Layer-scan structure: the block pattern (e.g. ``("rglru","rglru","local")``
+for recurrentgemma) is cycled over ``num_layers``; full pattern periods are
+stacked and driven by one ``jax.lax.scan`` whose body applies one period
+(keeps HLO size ~O(period), independent of depth — essential for the 64-layer
+dry-runs), and the ``num_layers % period`` remainder is applied unrolled.
+Remat (``jax.checkpoint``) wraps the scan body.
+
+Caches: each layer kind carries its own state type — KVCache (full), ring-buffer
+KVCache (local window), RGLRUState, RWKVState — stacked along the scan axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import params as pr
+from repro.models.attention import (KVCache, attention_specs, attend_full,
+                                    attend_local, decode_step as attn_decode)
+from repro.models.common import embed, embed_spec, rmsnorm, rmsnorm_spec, unembed
+from repro.models.mlp import mlp, mlp_specs, moe, moe_specs
+from repro.models.params import Spec
+from repro.models.rglru import (RGLRUState, rglru_block, rglru_decode,
+                                rglru_init_state, rglru_specs)
+from repro.models.rwkv6 import (RWKVState, rwkv_channel_mix, rwkv_init_state,
+                                rwkv_specs, rwkv_time_mix)
+
+
+def maybe_scan(body, carry, xs, *, force_unroll: bool = False):
+    """lax.scan, except a leading dim of 1 (or ``force_unroll``) is applied
+    as an unrolled python loop — no while op.  Besides being cheaper for
+    n==1, this is what lets the dry-run's 1-period / 2-period clone compiles
+    produce *unrolled* HLO so scan-body costs can be extrapolated (XLA's
+    cost_analysis counts a while body exactly once, ignoring trip count —
+    see launch/dryrun.py §scan-correction)."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if n == 1 or force_unroll:
+        ys = []
+        for i in range(n):
+            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        if ys and ys[0] is not None:
+            y = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        else:
+            y = None
+        return carry, y
+    return jax.lax.scan(body, carry, xs)
+
+
+def stack_specs(tree, n: int):
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.logical, init=s.init,
+                       scale=s.scale, dtype=s.dtype),
+        tree, is_leaf=pr.is_spec)
+
+
+def block_specs(cfg: ArchConfig, kind: str) -> dict:
+    d = cfg.d_model
+    out: dict[str, Any] = {"ln1": rmsnorm_spec(d), "ln2": rmsnorm_spec(d)}
+    if kind in ("attn", "local"):
+        out["attn"] = attention_specs(cfg)
+        out["mlp"] = moe_specs(cfg) if cfg.num_experts else mlp_specs(cfg)
+    elif kind == "rglru":
+        out["rec"] = rglru_specs(cfg)
+        out["mlp"] = moe_specs(cfg) if cfg.num_experts else mlp_specs(cfg)
+    elif kind == "rwkv":
+        out["rwkv"] = rwkv_specs(cfg)
+    else:
+        raise ValueError(kind)
+    return out
+
+
+class LM:
+    """Decoder-only language model built from an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig, force_unroll: bool = False):
+        self.cfg = cfg
+        self.period = len(cfg.block_pattern)
+        self.n_full = cfg.num_layers // self.period
+        self.n_tail = cfg.num_layers % self.period
+        self.force_unroll = force_unroll   # dry-run scan-cost clones
+
+    # ----- parameters -------------------------------------------------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        specs: dict[str, Any] = {
+            "embed": embed_spec(v, d),
+            "final_norm": rmsnorm_spec(d),
+        }
+        if self.n_full:
+            specs["scan"] = {
+                f"p{p}": stack_specs(block_specs(cfg, cfg.block_pattern[p]),
+                                     self.n_full)
+                for p in range(self.period)
+            }
+        if self.n_tail:
+            specs["tail"] = {
+                f"t{i}": block_specs(cfg, cfg.block_pattern[i])
+                for i in range(self.n_tail)
+            }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = Spec((d, v), ("fsdp", "vocab"))
+        return specs
+
+    def init(self, key: jax.Array):
+        return pr.init_params(self.specs(), key, self.cfg.param_dtype)
+
+    # ----- forward (train / prefill logits) ---------------------------------
+    def _apply_block(self, kind: str, bp: dict, h: jax.Array, aux: jax.Array,
+                     positions) -> tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        if kind in ("attn", "local"):
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            if kind == "attn":
+                h = h + attend_full(bp["attn"], hn, cfg, positions=positions)
+            else:
+                h = h + attend_local(bp["attn"], hn, cfg, positions=positions)
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            if cfg.num_experts:
+                y, a = moe(bp["mlp"], hn, cfg)
+                h, aux = h + y, aux + a
+            else:
+                h = h + mlp(bp["mlp"], hn, cfg)
+        elif kind == "rglru":
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            h = h + rglru_block(bp["rec"], hn, cfg)
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(bp["mlp"], hn, cfg)
+        elif kind == "rwkv":
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            y, _ = rwkv_time_mix(bp["rwkv"], hn, cfg)
+            h = h + y
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            y, _ = rwkv_channel_mix(bp["rwkv"], hn)
+            h = h + y
+        return h, aux
+
+    def embed_inputs(self, params, tokens, patches=None) -> jax.Array:
+        cfg = self.cfg
+        h = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        if cfg.family == "hybrid":                      # gemma lineage scales
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+        if patches is not None:
+            tv = patches.shape[1]
+            h = jnp.concatenate([patches.astype(h.dtype), h[:, tv:, :]], axis=1)
+        return constrain(h, ("batch", None, None))
+
+    def forward(self, params, tokens, *, positions=None, patches=None,
+                remat: str = "none") -> tuple[jax.Array, jax.Array]:
+        """tokens: (B, S) -> (logits (B,S,V) fp32, aux loss scalar)."""
+        cfg = self.cfg
+        h = self.embed_inputs(params, tokens, patches)
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])[None, :]
+        aux = jnp.zeros((), jnp.float32)
+
+        def period_body(carry, layer_ps):
+            h, aux = carry
+            for p in range(self.period):
+                h, aux = self._apply_block(cfg.block_pattern[p],
+                                           layer_ps[f"p{p}"], h, aux,
+                                           positions)
+                h = constrain(h, ("batch", None, None))
+            return (h, aux), None
+
+        body = period_body
+        if remat == "full":
+            body = jax.checkpoint(period_body, prevent_cse=False)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                period_body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        if self.n_full:
+            (h, aux), _ = maybe_scan(body, (h, aux), params["scan"],
+                                     force_unroll=self.force_unroll)
+        for i in range(self.n_tail):
+            h, aux = self._apply_block(cfg.block_pattern[i],
+                                       params["tail"][f"t{i}"], h, aux,
+                                       positions)
+
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params.get("unembed", params["embed"]), h,
+                         tied=cfg.tie_embeddings)
+        return constrain(logits, ("batch", None, "vocab")), aux
+
+    # ----- serving ----------------------------------------------------------
+    def _cache_for(self, kind: str, batch: int, cache_len: int, dtype):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        if kind == "attn":
+            return KVCache.init(batch, cfg.num_kv_heads, cache_len, hd, dtype)
+        if kind == "local":
+            return KVCache.init(batch, cfg.num_kv_heads,
+                                min(cache_len, cfg.window), hd, dtype)
+        if kind == "rglru":
+            return rglru_init_state(batch, cfg, dtype)
+        if kind == "rwkv":
+            return rwkv_init_state(batch, cfg, dtype)
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, cache_len: int):
+        """Cache pytree matching the parameter layout (scan-stacked)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        cache: dict[str, Any] = {}
+        if self.n_full:
+            cache["scan"] = {
+                f"p{p}": jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (self.n_full,) + x.shape).copy(),
+                    self._cache_for(cfg.block_pattern[p], batch, cache_len,
+                                    dtype))
+                for p in range(self.period)
+            }
+        if self.n_tail:
+            cache["tail"] = {
+                f"t{i}": self._cache_for(cfg.block_pattern[i], batch,
+                                         cache_len, dtype)
+                for i in range(self.n_tail)
+            }
+        return cache
+
+    def _decode_block(self, kind: str, bp: dict, h: jax.Array, cache,
+                      positions):
+        cfg = self.cfg
+        if kind in ("attn", "local"):
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            y, cache = attn_decode(bp["attn"], hn, cache, cfg,
+                                   window=cfg.window if kind == "local" else 0,
+                                   positions=positions)
+            h = h + y
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            if cfg.num_experts:
+                y, _ = moe(bp["mlp"], hn, cfg)
+                h = h + y
+            else:
+                h = h + mlp(bp["mlp"], hn, cfg)
+        elif kind == "rglru":
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            y, new_state = rglru_decode(bp["rec"], hn, cache, cfg)
+            h, cache = h + y, new_state
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            h = h + mlp(bp["mlp"], hn, cfg)
+        elif kind == "rwkv":
+            hn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            y, (tm_shift, s_fin) = rwkv_time_mix(
+                bp["rwkv"], hn, cfg, shift=cache.shift_tm, s0=cache.s)
+            h = h + y
+            hn = rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            y, cm_shift = rwkv_channel_mix(bp["rwkv"], hn,
+                                           shift=cache.shift_cm)
+            h = h + y
+            cache = RWKVState(shift_tm=tm_shift, shift_cm=cm_shift, s=s_fin)
+        return h, cache
+
+    def decode(self, params, cache, tokens, *, positions=None
+               ) -> tuple[jax.Array, Any]:
+        """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        h = self.embed_inputs(params, tokens)
+
+        def body(h, xs):
+            layer_ps, layer_cache = xs
+            new_caches = {}
+            for p in range(self.period):
+                h, nc = self._decode_block(cfg.block_pattern[p],
+                                           layer_ps[f"p{p}"], h,
+                                           layer_cache[f"p{p}"], positions)
+                new_caches[f"p{p}"] = nc
+            return h, new_caches
+
+        new_cache: dict[str, Any] = {}
+        if self.n_full:
+            h, new_cache["scan"] = maybe_scan(
+                body, h, (params["scan"], cache["scan"]),
+                force_unroll=self.force_unroll)
+        if self.n_tail:
+            new_cache["tail"] = {}
+            for i in range(self.n_tail):
+                h, nc = self._decode_block(cfg.block_pattern[i],
+                                           params["tail"][f"t{i}"], h,
+                                           cache["tail"][f"t{i}"], positions)
+                new_cache["tail"][f"t{i}"] = nc
+
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params.get("unembed", params["embed"]), h,
+                         tied=cfg.tie_embeddings)
+        return logits, new_cache
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array,
+              z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy (fp32) + z-loss regularizer."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

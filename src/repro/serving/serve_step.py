@@ -1,0 +1,45 @@
+"""serve_step builders: prefill (batch -> logits + primed cache) and decode
+(one token with a KV cache of the assigned length).
+
+The decode builder is what the ``decode_32k`` / ``long_500k`` dry-run cells
+lower: one new token against a cache of ``seq_len`` (ring-buffer-bounded for
+local-attention layers, O(1) recurrent state for RG-LRU/RWKV — which is the
+whole sub-quadratic story of those archs; EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+
+
+def make_decode_step(model, cfg: ArchConfig, *, greedy: bool = True):
+    """(params, cache, tokens (B,1), step) -> (next_token (B,1), logits, cache)."""
+    def decode_step(params, cache, tokens, step):
+        positions = None
+        if cfg.mrope_sections is not None:
+            b = tokens.shape[0]
+            positions = jnp.broadcast_to(step, (3, b, 1)).astype(jnp.int32)
+        logits, cache = model.decode(params, cache, tokens,
+                                     positions=positions)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return nxt, logits, cache
+    return decode_step
+
+
+def make_prefill(model, cfg: ArchConfig):
+    """(params, batch) -> logits.  (Cache priming for the serving engine is
+    done token-batched via decode for correctness; the prefill path here is
+    the throughput-shape the dry-run lowers.)"""
+    def prefill(params, batch):
+        if cfg.family == "audio":
+            logits, _ = model.forward(params, batch["tokens"], batch["frames"])
+        else:
+            logits, _ = model.forward(params, batch["tokens"],
+                                      positions=batch.get("positions"),
+                                      patches=batch.get("patches"))
+        return logits
+    return prefill

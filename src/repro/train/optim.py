@@ -1,0 +1,94 @@
+"""Optimizer substrate: AdamW + cosine schedule + global-norm clipping +
+optional gradient compression (error feedback), pure JAX (no optax in this
+environment).
+
+Optimizer state is a pytree mirroring the params (m, v per leaf), so the same
+logical sharding rules apply — m/v inherit each param's sharding (FSDP'd
+optimizer state = ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.collectives import compress_decompress, init_ef
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    compression: str = "none"          # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    ef: Optional[Any]                  # error-feedback state (or None)
+
+
+def init_opt_state(params, cfg: OptConfig) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    ef = init_ef(params) if cfg.compression != "none" else None
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=z,
+                      v=jax.tree.map(jnp.copy, z), ef=ef)
+
+
+def schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: OptConfig
+                  ) -> tuple[Any, AdamWState]:
+    """One AdamW step (with optional compression + EF before the moment
+    updates — modelling a compressed all-reduce; DESIGN.md §5.4)."""
+    ef = state.ef
+    if cfg.compression != "none":
+        grads, ef = compress_decompress(grads, ef, method=cfg.compression,
+                                        topk_frac=cfg.topk_frac)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    lr = schedule(state.step, cfg)
+    b1, b2 = cfg.betas
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** (state.step + 1))
+        vh = v / (1 - b2 ** (state.step + 1))
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:       # no decay on norms/bias
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    return new_p, AdamWState(step=state.step + 1, m=new_m, v=new_v, ef=ef)

@@ -1,0 +1,90 @@
+"""train_step / eval_step builders.
+
+``make_train_step`` returns a jit-ready pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation (a ``lax.scan`` over
+microbatches — bounds activation memory and the blast radius of stragglers)
+and remat policy threaded into the model's layer scan.
+
+Sharding is applied by the caller (launch/dryrun.py, launch/train.py) via the
+logical trees from models/params.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.transformer import xent_loss
+from repro.train.optim import OptConfig, apply_updates
+
+AUX_WEIGHT = 0.01      # MoE load-balance loss weight
+
+
+def make_loss_fn(model, cfg: ArchConfig, remat: str = "none"):
+    def loss_fn(params, batch):
+        if cfg.family == "audio":
+            logits, aux = model.forward(params, batch["tokens"],
+                                        batch["frames"], remat=remat)
+        else:
+            logits, aux = model.forward(params, batch["tokens"],
+                                        positions=batch.get("positions"),
+                                        patches=batch.get("patches"),
+                                        remat=remat)
+        # next-token prediction: shift labels left
+        labels = batch.get("labels", batch["tokens"])
+        loss = xent_loss(logits[:, :-1, :], labels[:, 1:])
+        return loss + AUX_WEIGHT * aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(model, cfg: ArchConfig, opt_cfg: OptConfig, *,
+                    remat: str = "dots", microbatches: int = 1):
+    loss_fn = make_loss_fn(model, cfg, remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, (loss, aux)), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0] if x.ndim >= 1 else 1
+                lead = -1 if x.ndim == 0 else b // microbatches
+                if x.ndim >= 2 and x.shape[0] == 3:   # mrope positions (3,B,S)
+                    return jnp.moveaxis(
+                        x.reshape(3, microbatches, lead, *x.shape[2:]), 1, 0)
+                return x.reshape(microbatches, lead, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc, a_acc = carry
+                (_, (loss, aux)), grads = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss, a_acc + aux), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (zero_g, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, aux = loss / microbatches, aux / microbatches
+
+        params, opt_state = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "aux_loss": aux.astype(jnp.float32),
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, cfg: ArchConfig):
+    loss_fn = make_loss_fn(model, cfg)
+
+    def eval_step(params, batch):
+        _, (loss, aux) = loss_fn(params, batch)
+        return {"loss": loss, "aux_loss": aux}
+    return eval_step

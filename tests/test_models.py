@@ -1,0 +1,122 @@
+"""Per-arch smoke tests (assignment deliverable (f)): reduced same-family
+configs — one forward + one train step on CPU, output shapes + no NaNs; and
+decode==forward parity (cache correctness) across families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeSpec, get_reduced_config, list_archs
+from repro.models import params as pr
+from repro.models.registry import build_model, input_arrays
+from repro.models.transformer import xent_loss
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+SMOKE = ShapeSpec("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    inp = input_arrays(cfg, SMOKE)
+
+    if cfg.family == "audio":
+        logits, aux = model.forward(params, inp["tokens"], inp["frames"])
+    else:
+        logits, aux = model.forward(params, inp["tokens"],
+                                    positions=inp.get("positions"),
+                                    patches=inp.get("patches"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), "NaN in logits"
+    loss = xent_loss(logits, inp["tokens"])
+    assert np.isfinite(float(loss))
+
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(model, cfg, opt_cfg, remat="dots"))
+    p2, o2, m = step(params, opt, inp)
+    assert np.isfinite(float(m["loss"]))
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved, "train step did not update params"
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-2b",
+                                  "rwkv6-7b", "qwen3-32b", "qwen2.5-3b",
+                                  "granite-moe-1b-a400m", "qwen2-vl-2b"])
+def test_decode_matches_forward(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    S = 10
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, S)), jnp.int32)
+    kw = {}
+    if cfg.family == "vlm":
+        # decode parity for the text path (no patches)
+        pos = jnp.broadcast_to(jnp.arange(S), (3, 2, S)).astype(jnp.int32)
+        kw = {"positions": pos}
+    full, _ = model.forward(params, toks, **kw)
+    cache = model.init_cache(2, S)
+    errs = []
+    for t in range(S):
+        dkw = {}
+        if cfg.family == "vlm":
+            dkw = {"positions": jnp.full((3, 2, 1), t, jnp.int32)}
+        lg, cache = model.decode(params, cache, toks[:, t:t + 1], **dkw)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 5e-4, f"decode diverges from forward: {max(errs)}"
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_reduced_config("whisper-tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    S = 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, S)), jnp.int32)
+    frames = jnp.asarray(rng.normal(size=(2, cfg.encoder_seq, cfg.d_model))
+                         * 0.02, jnp.float32)
+    full, _ = model.forward(params, toks, frames)
+    enc = model.encode(params, frames)
+    cache = model.init_cache(2, S)
+
+    def xkv(bp):
+        kk = jnp.einsum("btd,dhk->bthk", enc, bp["cross"]["wk"].astype(enc.dtype))
+        vv = jnp.einsum("btd,dhk->bthk", enc, bp["cross"]["wv"].astype(enc.dtype))
+        return kk, vv
+
+    ks, vs = jax.vmap(xkv)(params["dec"])
+    cache["cross_k"], cache["cross_v"] = ks, vs
+    errs = []
+    for t in range(S):
+        lg, cache = model.decode(params, cache, toks[:, t:t + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 5e-4
+
+
+def test_vlm_patch_merge():
+    cfg = get_reduced_config("qwen2-vl-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    inp = input_arrays(cfg, SMOKE)
+    logits, _ = model.forward(params, inp["tokens"], patches=inp["patches"],
+                              positions=inp["positions"])
+    # changing a patch changes prefix logits
+    p2 = inp["patches"].at[:, 0, :].add(1.0)
+    logits2, _ = model.forward(params, inp["tokens"], patches=p2,
+                               positions=inp["positions"])
+    assert not np.allclose(np.asarray(logits[:, 0]), np.asarray(logits2[:, 0]))
+
+
+def test_param_spec_shapes_match_init():
+    cfg = get_reduced_config("qwen3-32b")
+    model = build_model(cfg)
+    structs = pr.shape_tree(model.specs(), cfg.param_dtype)
+    params = model.init(jax.random.PRNGKey(0))
+    for s, p in zip(jax.tree.leaves(structs), jax.tree.leaves(params)):
+        assert s.shape == p.shape and s.dtype == p.dtype

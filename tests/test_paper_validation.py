@@ -1,0 +1,69 @@
+"""Paper §VI / §VIII arithmetic reproduced exactly (EXPERIMENTS.md
+§Paper-validation)."""
+import pytest
+
+from repro.core import CGRA, V100, analyze, crossover_timesteps
+from repro.core.roofline import worker_demand_gflops
+from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+
+
+def test_1d_arithmetic_intensity():
+    s = paper_stencil_1d()
+    # paper: (16*2+1)*(194400-16)/((194400+194400)*8) = 2.06
+    assert abs(s.arithmetic_intensity() - 2.06) < 0.01
+
+
+def test_2d_arithmetic_intensity():
+    s = paper_stencil_2d()
+    # paper: (48*2+1)*((449-24)*(960-24))/((2*960*449)*8) = 5.59
+    assert abs(s.arithmetic_intensity() - 5.59) < 0.01
+
+
+def test_cgra_compute_peak():
+    assert abs(CGRA.peak_gflops - 614.4) < 1e-9      # 2*256*1.2
+
+
+def test_1d_roofline_and_worker_selection():
+    s = paper_stencil_1d()
+    r = analyze(s, CGRA)
+    assert abs(r.bw_bound_gflops - 206.2) < 0.5      # paper: 206
+    assert r.workers == 6                            # paper: 6 workers
+    assert abs(r.worker_demand_gflops - 237.6) < 0.1 # paper: 237.6
+    assert r.bound == "memory"
+
+
+def test_2d_roofline_and_worker_fit():
+    s = paper_stencil_2d()
+    r = analyze(s, CGRA)
+    assert s.macs_per_worker == 49                   # 48 MAC + 1 MUL
+    assert r.workers == 5                            # paper: 5 fit
+    assert abs(worker_demand_gflops(s, CGRA, 5) - 582.0) < 0.1
+    assert abs(r.achievable_gflops - 559.5) < 1.0    # paper: 559
+
+
+def test_table1_speedup_ratios():
+    """16 CGRA tiles vs V100, using the paper's own % -of-peak figures."""
+    cgra16 = CGRA.scaled(16)
+    s1, s2 = paper_stencil_1d(), paper_stencil_2d()
+    # 1D: 91% of CGRA peak vs 90% of V100 peak -> 1.9x
+    cgra_1d = analyze(s1, cgra16).achievable_gflops * 0.91
+    v100_1d = analyze(s1, V100).achievable_gflops * 0.90
+    assert abs(cgra_1d / v100_1d - 1.9) < 0.1
+    # 2D: 78% vs 48% -> ~3.0x (paper: 3.03)
+    cgra_2d = analyze(s2, cgra16).achievable_gflops * 0.78
+    v100_2d = analyze(s2, V100).achievable_gflops * 0.48
+    assert abs(cgra_2d / v100_2d - 3.03) < 0.15
+    # and the paper's 2.3 TFLOPS on V100 for stencil2D
+    assert abs(v100_2d / 1000 - 2.3) < 0.05
+
+
+def test_v100_2d_roofline_peak():
+    s2 = paper_stencil_2d()
+    r = analyze(s2, V100)
+    assert abs(r.achievable_gflops / 1000 - 4.8) < 0.1   # paper: 4.8 TFLOPS
+
+
+def test_fusion_crossover_exists():
+    s1 = paper_stencil_1d()
+    t = crossover_timesteps(s1, CGRA, workers=6)
+    assert t == 3      # AI 2.06 -> needs ~3 fused steps to hit 614 GFLOPS

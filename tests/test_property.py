@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants (deliverable (c)).
+
+Stencil invariants:
+  * linearity: S(ax + by) == a S(x) + b S(y)
+  * shift equivariance in the interior
+  * constant-field response = sum(coeffs) * c on the interior
+  * kernel == oracle on arbitrary shapes/radii
+Mapping invariants (the paper's interleave/filter algebra):
+  * reader streams partition the grid exactly
+  * every filter's keep-window lies inside its reader stream
+  * sync expectations sum to the interior size
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapping import map_1d
+from repro.core.reference import stencil_reference_np
+from repro.core.spec import StencilSpec
+from repro.kernels.stencil1d.ops import stencil1d
+from repro.kernels.stencil1d.ref import stencil1d_ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def spec_1d(draw):
+    r = draw(st.integers(1, 4))
+    n = draw(st.integers(max(8 * r + 2, 24), 160))
+    coeffs = tuple(
+        draw(st.lists(st.floats(-1, 1, allow_nan=False, width=32),
+                      min_size=2 * r + 1, max_size=2 * r + 1)))
+    return StencilSpec((n,), (r,), (coeffs,), dtype="float32")
+
+
+@given(spec_1d(), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_linearity(spec, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=spec.grid_shape).astype(np.float32)
+    y = rng.normal(size=spec.grid_shape).astype(np.float32)
+    a, b = 1.7, -0.4
+    lhs = stencil_reference_np(a * x + b * y, spec)
+    rhs = a * stencil_reference_np(x, spec) + b * stencil_reference_np(y, spec)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+@given(spec_1d(), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_shift_equivariance_interior(spec, shift, seed):
+    rng = np.random.default_rng(seed)
+    (n,) = spec.grid_shape
+    (r,) = spec.radii
+    x = rng.normal(size=n).astype(np.float32)
+    xs = np.roll(x, shift)
+    y, ys = stencil_reference_np(x, spec), stencil_reference_np(xs, spec)
+    lo, hi = r + shift, n - r
+    np.testing.assert_allclose(ys[lo:hi], y[lo - shift:hi - shift], atol=1e-4)
+
+
+@given(spec_1d(), st.floats(-3, 3, allow_nan=False, width=32))
+@settings(**SET)
+def test_constant_field(spec, c):
+    (n,) = spec.grid_shape
+    (r,) = spec.radii
+    y = stencil_reference_np(np.full(n, c, np.float32), spec)
+    expect = c * sum(spec.coeffs[0])
+    np.testing.assert_allclose(y[r:n - r], expect, atol=1e-3)
+    assert np.all(y[:r] == 0) and np.all(y[n - r:] == 0)
+
+
+@given(spec_1d(), st.integers(0, 2 ** 31 - 1), st.integers(1, 2))
+@settings(**SET)
+def test_kernel_matches_oracle(spec, seed, t):
+    rng = np.random.default_rng(seed)
+    (n,) = spec.grid_shape
+    if spec.radii[0] * t * 2 >= n:
+        return
+    x = jnp.asarray(rng.normal(size=(1, n)), jnp.float32)
+    y = stencil1d(x, spec.coeffs[0], timesteps=t, backend="pallas",
+                  block=(1, 128))
+    yr = stencil1d_ref(x, spec.coeffs[0], timesteps=t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+
+
+@given(st.integers(24, 200), st.integers(1, 4), st.integers(1, 6))
+@settings(**SET)
+def test_mapping_interleave_algebra(n, r, w):
+    if n <= 2 * r:
+        return
+    coeffs = tuple([1.0 / (2 * r + 1)] * (2 * r + 1))
+    spec = StencilSpec((n,), (r,), (coeffs,), dtype="float64")
+    plan = map_1d(spec, workers=w)
+    # reader streams partition [0, n)
+    seen = sorted(i for loads in plan.reader_loads for i in loads)
+    assert seen == list(range(n))
+    # writers partition the interior
+    outs = sorted(i for ws in plan.writer_stores for i in ws)
+    assert outs == list(range(r, n - r))
+    # sync expectations match writer loads
+    assert plan.sync_expect == [len(ws) for ws in plan.writer_stores]
+    # every filter keep-window fits its source stream (0^m 1^n 0^p wellformed)
+    for nd in plan.dfg.nodes:
+        if nd.op == "filter":
+            src_len = len(plan.reader_loads[0])  # streams differ by <=1
+            assert nd.params["m"] + nd.params["n"] <= src_len + 1
