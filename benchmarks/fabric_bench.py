@@ -1,0 +1,68 @@
+"""Fabric place-and-route benchmark: the paper's mappings on a 16x16 mesh.
+
+Two parts per mapping (1D w=8, 2D w=8):
+  * **place+route at paper scale** — the full-radius DFG (17-pt r=8 / 49-pt
+    r=12) is placed and routed on the paper's 16x16 fabric; reports weighted
+    hop count, link congestion (max channel load / hot-spots) and fabric
+    utilization.
+  * **ideal vs routed simulation** on a reduced grid — the same mapping
+    structure simulated with free one-hop wires vs the routed network,
+    reporting the cycle inflation the on-chip network actually costs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CGRA, map_1d, map_2d, simulate
+from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+from repro.fabric import FabricTopology, place, route
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    cases = [
+        # (name, paper-scale spec, reduced-sim spec, mapper, workers)
+        ("stencil1d_w8", paper_stencil_1d(n=194400, rx=8),
+         paper_stencil_1d(n=2400, rx=8), map_1d, 8),
+        ("stencil2d_w8", paper_stencil_2d(ny=449, nx=960, r=12),
+         paper_stencil_2d(ny=32, nx=64, r=12), map_2d, 8),
+    ]
+    for name, spec_full, spec_sim, mapper, w in cases:
+        # --- place + route at paper scale --------------------------------
+        t0 = time.perf_counter()
+        plan = mapper(spec_full, workers=w)
+        topo = FabricTopology.mesh(16, 16)
+        rf = route(place(plan, topo, seed=0))
+        us = (time.perf_counter() - t0) * 1e6
+        s = rf.stats()
+        hot = s["hotspots"][0] if s["hotspots"] else {}
+        rows.append((
+            f"fabric/pnr_{name}", us,
+            f"nodes={len(plan.dfg.nodes)} hops_mean={s['hops_mean']} "
+            f"hops_max={s['hops_max']} weighted_hops={s['weighted_hops']} "
+            f"max_chan={s['max_channel_load']}/{s['channel_capacity']} "
+            f"pe_util={s['pe_utilization']:.1%} "
+            f"link_util={s['link_utilization']:.1%} "
+            f"hotspot={hot.get('link', '-')}@{hot.get('trees', 0)}"))
+
+        # --- ideal vs routed simulation on the reduced grid --------------
+        x = rng.normal(size=spec_sim.grid_shape)
+        t0 = time.perf_counter()
+        ideal = simulate(mapper(spec_sim, workers=w), x, CGRA)
+        plan_net = mapper(spec_sim, workers=w)
+        rf_net = route(place(plan_net, topo, seed=0))
+        routed = simulate(plan_net, x, CGRA, fabric=rf_net)
+        us = (time.perf_counter() - t0) * 1e6
+        assert np.array_equal(ideal.output, routed.output)
+        rows.append((
+            f"fabric/sim_{name}", us,
+            f"ideal_cycles={ideal.cycles} routed_cycles={routed.cycles} "
+            f"inflation={routed.cycles / ideal.cycles:.2f}x "
+            f"token_hops={routed.fabric['token_hops']} "
+            f"stall_cycles={routed.fabric['stall_cycles']} "
+            f"bit_identical=True"))
+    return rows

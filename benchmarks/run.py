@@ -7,17 +7,19 @@ Prints ``name,us_per_call,derived`` CSV (assignment deliverable (d)).
   kernel_roofline   — TPU kernel rooflines (paper method, v5e constants)
   fusion_crossover  — §IV temporal fusion (beyond paper)
   vii_gpu_efficiency — §VII efficiency-vs-AI trend (incl. 3D stencils)
+  fabric_bench      — place-and-route + network-aware sim on the 16x16 mesh
 """
 from __future__ import annotations
 
 import sys
 import traceback
 
-from benchmarks import (ai_table, fig12_roofline, fusion_crossover,
-                        kernel_roofline, table1, vii_gpu_efficiency)
+from benchmarks import (ai_table, fabric_bench, fig12_roofline,
+                        fusion_crossover, kernel_roofline, table1,
+                        vii_gpu_efficiency)
 
 MODULES = [ai_table, fig12_roofline, table1, kernel_roofline,
-           fusion_crossover, vii_gpu_efficiency]
+           fusion_crossover, vii_gpu_efficiency, fabric_bench]
 
 
 def main() -> None:

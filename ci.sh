@@ -1,0 +1,5 @@
+#!/usr/bin/env bash
+# Tier-1 verify gate (see ROADMAP.md) — one command for CI and local use.
+set -euo pipefail
+cd "$(dirname "$0")"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

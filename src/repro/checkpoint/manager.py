@@ -28,7 +28,11 @@ import numpy as np
 
 
 def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
-    leaves, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; tree_util spelling
+    # is available everywhere.
+    flatten_with_path = getattr(jax.tree, "flatten_with_path",
+                                jax.tree_util.tree_flatten_with_path)
+    leaves, treedef = flatten_with_path(tree)
     named = [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
     return named, treedef
 

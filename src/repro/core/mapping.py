@@ -96,7 +96,8 @@ def map_1d(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
                 lead = (c + j) // w                  # 0^m: drop first m tokens
                 keep = _make_keep_1d(lead, n_c)
                 f = g.add("filter", f"flt_l{layer}_w{c}_t{j}", stage="compute",
-                          worker=c, m=lead, n=n_c, layer=layer, keep=keep)
+                          worker=c, m=lead, n=n_c, layer=layer, keep=keep,
+                          keep_count=n_c)
                 g.connect(sources[(c + j) % w], f, capacity=queue_capacity)
                 op = "mul" if prev is None else "mac"
                 pe = g.add(op, f"{op}_l{layer}_w{c}_t{j}", stage="compute",
@@ -174,7 +175,8 @@ def map_2d(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
             lead = (c + j) // w
             keep = _make_keep_2d(lead, n_cols, ncpr, row_lo=ry, n_rows=n_rows)
             f = g.add("filter", f"fx_w{c}_t{j}", stage="compute", worker=c,
-                      m=lead, n=n_cols, row_lo=ry, keep=keep)
+                      m=lead, n=n_cols, row_lo=ry, keep=keep,
+                      keep_count=n_cols * n_rows)
             g.connect(readers[(c + j) % w], f, capacity=queue_capacity)
             op = "mul" if prev is None else "mac"
             pe = g.add(op, f"{op}x_w{c}_t{j}", stage="compute", worker=c,
@@ -196,7 +198,8 @@ def map_2d(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
         for j in [jj for jj in range(2 * ry + 1) if jj != ry]:
             keep = _make_keep_2d(lead, n_cols, ncpr, row_lo=j, n_rows=n_rows)
             f = g.add("filter", f"fy_w{c}_t{j}", stage="compute", worker=c,
-                      m=lead, n=n_cols, row_lo=j, keep=keep)
+                      m=lead, n=n_cols, row_lo=j, keep=keep,
+                      keep_count=n_cols * n_rows)
             g.connect(readers[kc], f, capacity=queue_capacity)
             op = "mul" if prev is None else "mac"
             pe = g.add(op, f"{op}y_w{c}_t{j}", stage="compute", worker=c,

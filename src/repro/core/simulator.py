@@ -13,16 +13,31 @@ mapping is validated end-to-end against ``core.reference`` — not just timed.
 Synchronous two-phase semantics: firing decisions for cycle t use queue state
 at the start of t (push+pop on the same queue in one cycle is allowed, as in
 real hardware FIFOs; a push into a queue that was full at cycle start is not).
+
+**Network-aware mode** (``fabric=`` a placed-and-routed ``RoutedFabric`` from
+``repro.fabric``): every producer→consumer queue is no longer a free one-hop
+wire.  A pushed token enters the on-chip network, pays one cycle per hop of
+its XY route, and contends with co-routed trees for each link's
+words-per-cycle bandwidth (store-and-forward: a token blocked on a busy link
+departs on the link's next free slot).  Fan-out is multicast — one producer's
+token crosses each shared tree link once.  Values and firing rules are
+untouched, so the output grid is bit-identical to ideal mode and routed
+cycle counts are >= ideal ones.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
+from typing import TYPE_CHECKING
 
 import numpy as np
 
-from repro.core.dfg import DFG, FLOPS_PER_OP, Node
+from repro.core.dfg import DFG, Edge, FLOPS_PER_OP, Node
 from repro.core.mapping import MappingPlan
 from repro.core.roofline import Machine, analyze
+
+if TYPE_CHECKING:  # pragma: no cover - avoids core <-> fabric import cycle
+    from repro.fabric.route import RoutedFabric
 
 
 class SimDeadlock(RuntimeError):
@@ -42,20 +57,101 @@ class SimResult:
     pct_of_compute_peak: float
     max_queue_total: int
     mac_pes: int
+    fabric: dict | None = None          # network-aware mode: routing stats
 
     def summary(self) -> str:
-        return (f"cycles={self.cycles} flops={self.flops} "
-                f"GFLOPS={self.gflops:.1f} roofline%={self.pct_of_roofline:.1%} "
-                f"loads={self.loads} stores={self.stores} macPEs={self.mac_pes}")
+        s = (f"cycles={self.cycles} flops={self.flops} "
+             f"GFLOPS={self.gflops:.1f} roofline%={self.pct_of_roofline:.1%} "
+             f"loads={self.loads} stores={self.stores} macPEs={self.mac_pes}")
+        if self.fabric is not None:
+            s += (f" | fabric: pe_util={self.fabric['pe_utilization']:.0%} "
+                  f"hops_mean={self.fabric['hops_mean']} "
+                  f"max_chan={self.fabric['max_channel_load']} "
+                  f"token_hops={self.fabric['token_hops']}")
+        return s
+
+
+class _Network:
+    """Per-simulation on-chip network state (network-aware mode).
+
+    Tokens pushed onto a routed edge ride through a transit pipeline:
+    arrival = injection cycle + hops, plus any store-and-forward stalls when
+    a link's words-per-cycle budget is already spoken for in a cycle.  A
+    producer's fan-out is one multicast: shared tree links are crossed once
+    per token (booked once per firing), not once per edge.
+    """
+
+    def __init__(self, fabric: "RoutedFabric", g: DFG):
+        from repro.fabric.route import edge_key  # deferred: no import cycle
+        self.wpc = {k: l.words_per_cycle for k, l in
+                    fabric.topo.links.items()}
+        self.routes: dict[int, tuple] = {}
+        self.edge_by_id: dict[int, Edge] = {}
+        for e in g.edges():
+            self.routes[id(e)] = fabric.routes[edge_key(e)]
+            self.edge_by_id[id(e)] = e
+        self.transit: dict[int, deque] = {eid: deque() for eid in self.routes}
+        self.used: dict[tuple, int] = {}     # (link, cycle) -> words in flight
+        self.last_arrival: dict[int, int] = {}
+        self.token_hops = 0
+        self.stall_cycles = 0            # link-contention wait, summed
+
+    def broadcast(self, nd: Node, v, cycle: int) -> None:
+        booked: dict[tuple, int] = {}    # link -> slot of this token's copy
+        for e in nd.out_edges:
+            links = self.routes[id(e)]
+            if not links:                # co-resident PEs: ideal local queue
+                e.push(v)
+                continue
+            t = cycle
+            for lk in links:
+                if lk in booked:         # ride the multicast copy
+                    t = booked[lk] + 1
+                    continue
+                cap = self.wpc[lk]
+                slot = t
+                while self.used.get((lk, slot), 0) >= cap:
+                    slot += 1
+                self.stall_cycles += slot - t
+                self.used[(lk, slot)] = self.used.get((lk, slot), 0) + 1
+                booked[lk] = slot
+                self.token_hops += 1
+                t = slot + 1
+            arr = max(t, self.last_arrival.get(id(e), 0))  # FIFO per edge
+            self.last_arrival[id(e)] = arr
+            self.transit[id(e)].append((arr, v))
+
+    def deliver(self, cycle: int) -> None:
+        # slot searches always start at the current cycle, so bookings for
+        # past cycles can never be read again — drop them periodically to
+        # keep memory flat over long simulations.
+        if cycle % 4096 == 0 and self.used:
+            self.used = {k: v for k, v in self.used.items() if k[1] >= cycle}
+        for eid, dq in self.transit.items():
+            if dq and dq[0][0] <= cycle:
+                e = self.edge_by_id[eid]
+                while dq and dq[0][0] <= cycle:
+                    e.push(dq.popleft()[1])
+
+    def edge_full(self, e: Edge) -> bool:
+        return e.capacity is not None and \
+            len(e.q) + len(self.transit[id(e)]) >= e.capacity
+
+    def in_flight(self) -> bool:
+        return any(self.transit.values())
 
 
 def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
              max_cycles: int = 50_000_000,
-             mem_efficiency: float = 1.0) -> SimResult:
+             mem_efficiency: float = 1.0,
+             fabric: "RoutedFabric | None" = None) -> SimResult:
     """``mem_efficiency`` derates the memory-port bandwidth to model cache
     conflict misses (the paper observed "more conflict misses in the cache
     for stencil 2D" — its cycle-accurate 2D result corresponds to ~0.80;
     our queue model is ideal at 1.0).  See EXPERIMENTS.md §Paper-validation.
+
+    ``fabric``: a ``repro.fabric.route.RoutedFabric`` for this plan turns on
+    network-aware mode (routed hop latency + link-bandwidth contention).
     """
     spec = plan.spec
     g = plan.dfg
@@ -74,6 +170,8 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
         if nd.name == "done":
             done_node = nd
     assert done_node is not None
+
+    net = _Network(fabric, g) if fabric is not None else None
 
     elems_per_cycle = mem_efficiency * machine.bw_gbps / machine.clock_ghz / (
         8 if spec.dtype == "float64" else spec.bytes_per_elem)
@@ -96,12 +194,20 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
             raise SimDeadlock(f"exceeded max_cycles={max_cycles}")
         cycles += 1
         credit = min(credit + elems_per_cycle, 4 * elems_per_cycle)
+        if net is not None:
+            net.deliver(cycles)          # arrivals land before the snapshot
         # phase 1: snapshot eligibility -----------------------------------
         in_avail = {}
         out_free = {}
-        for nd in nodes:
-            in_avail[nd.nid] = all(e.q for e in nd.in_edges)
-            out_free[nd.nid] = all(not e.full() for e in nd.out_edges)
+        if net is None:
+            for nd in nodes:
+                in_avail[nd.nid] = all(e.q for e in nd.in_edges)
+                out_free[nd.nid] = all(not e.full() for e in nd.out_edges)
+        else:
+            for nd in nodes:
+                in_avail[nd.nid] = all(e.q for e in nd.in_edges)
+                out_free[nd.nid] = all(not net.edge_full(e)
+                                       for e in nd.out_edges)
         any_fired = False
         # phase 2: execute. Memory nodes first in rotated order (fair
         # bandwidth arbitration), then the rest.
@@ -188,9 +294,14 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
             nd.fires += 1
             fires[op] = fires.get(op, 0) + 1
             any_fired = True
-            for e in nd.out_edges:
-                e.push(v)
+            if net is None:
+                for e in nd.out_edges:
+                    e.push(v)
+            else:
+                net.broadcast(nd, v, cycles)
         if not any_fired and not finished:
+            if net is not None and net.in_flight():
+                continue                 # tokens still riding the network
             stuck = [f"{nd.name}({nd.op}) in={[len(e.q) for e in nd.in_edges]} "
                      f"outfull={[e.full() for e in nd.out_edges]}"
                      for nd in nodes if any(e.q for e in nd.in_edges)][:8]
@@ -200,9 +311,14 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     gflops = (flops / cycles) * machine.clock_ghz
     roof = analyze(spec, machine, workers=plan.workers)
     max_q = sum(e.max_occupancy for e in g.edges())
+    fabric_stats = None
+    if fabric is not None:
+        fabric_stats = {**fabric.stats(),
+                        "token_hops": net.token_hops,
+                        "stall_cycles": net.stall_cycles}
     return SimResult(
         cycles=cycles, flops=flops, loads=loads, stores=stores, fires=fires,
         output=flat_out.reshape(spec.grid_shape), gflops=gflops,
         pct_of_roofline=gflops / roof.achievable_gflops,
         pct_of_compute_peak=gflops / machine.peak_gflops,
-        max_queue_total=max_q, mac_pes=plan.mac_pes)
+        max_queue_total=max_q, mac_pes=plan.mac_pes, fabric=fabric_stats)

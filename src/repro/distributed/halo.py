@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.spec import StencilSpec
+from repro.distributed.sharding import shard_map_compat
 
 
 # --------------------------------------------------------------------------
@@ -178,7 +179,7 @@ def distributed_stencil1d(spec: StencilSpec, mesh: Mesh, axis: str = "data"):
         "shard smaller than halo; reduce timesteps or shards"
     pspec = P(axis)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         functools.partial(_local_stencil1d, spec=spec, axis_name=axis),
         mesh=mesh, in_specs=pspec, out_specs=pspec)
     return jax.jit(fn, in_shardings=NamedSharding(mesh, pspec),
@@ -195,7 +196,7 @@ def distributed_stencil2d(spec: StencilSpec, mesh: Mesh,
     assert nx // sx >= spec.radii[1] * spec.timesteps
     pspec = P(axes[0], axes[1])
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         functools.partial(_local_stencil2d, spec=spec, ax_names=axes),
         mesh=mesh, in_specs=pspec, out_specs=pspec)
     return jax.jit(fn, in_shardings=NamedSharding(mesh, pspec),
@@ -212,7 +213,7 @@ def distributed_stencil3d(spec: StencilSpec, mesh: Mesh,
     assert ny // sy >= spec.radii[1] * spec.timesteps
     pspec = P(axes[0], axes[1], None)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         functools.partial(_local_stencil3d, spec=spec, ax_names=axes),
         mesh=mesh, in_specs=pspec, out_specs=pspec)
     return jax.jit(fn, in_shardings=NamedSharding(mesh, pspec),

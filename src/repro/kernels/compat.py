@@ -1,0 +1,16 @@
+"""JAX version-compat shims shared by the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back
+again across release lines); every ``kernel.py`` builds its compiler params
+through :func:`tpu_compiler_params` so the rename never breaks a kernel.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CP_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params under either pltpu spelling."""
+    return _CP_CLS(**kwargs)

@@ -1,0 +1,193 @@
+"""Physical fabric subsystem: deterministic placement, capability/slot
+legality, legal XY mesh routes, channel-overflow failure, and network-aware
+simulation that reproduces the reference numerics exactly."""
+import numpy as np
+import pytest
+
+from repro.core import CGRA, map_1d, map_2d, simulate
+from repro.core.reference import stencil_reference_np
+from repro.core.spec import (StencilSpec, heat_2d, paper_stencil_1d,
+                             paper_stencil_2d)
+from repro.fabric import (FabricTopology, PlacementError, RouteError,
+                          op_class, place, placed_assembly, placed_dot,
+                          route, xy_route)
+
+
+def _spec1d(rng, n=240, r=2):
+    c = tuple((rng.normal(size=2 * r + 1) / (2 * r + 1)).tolist())
+    return StencilSpec((n,), (r,), (c,), dtype="float64")
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+def test_placement_deterministic(rng):
+    plan = map_1d(_spec1d(rng), workers=4)
+    topo = FabricTopology.mesh(8, 8)
+    a = place(plan, topo, seed=3)
+    b = place(plan, topo, seed=3)
+    assert a.coords == b.coords
+    assert a.weighted_hops() == b.weighted_hops()
+
+
+def test_placement_capability_and_slots(rng):
+    plan = map_2d(heat_2d(18, 24, dtype="float64"), workers=3)
+    topo = FabricTopology.mesh(8, 8)
+    pl = place(plan, topo, seed=0)
+    occ = {}
+    for n in plan.dfg.nodes:
+        c = pl.coords[n.nid]
+        assert topo.capable(c, n.op), (n.name, n.op, c)
+        occ[c] = occ.get(c, 0) + 1
+    for c, k in occ.items():
+        assert k <= topo.pes[c].slots
+    # memory ops live where the memory ports are: the fabric boundary
+    for n in plan.dfg.nodes:
+        if op_class(n.op) == "mem":
+            r, c = pl.coords[n.nid]
+            assert r in (0, topo.rows - 1) or c in (0, topo.cols - 1)
+
+
+def test_placement_annealing_improves_seed(rng):
+    plan = map_1d(_spec1d(rng), workers=4)
+    topo = FabricTopology.mesh(8, 8)
+    seeded = place(plan, topo, seed=0, anneal_iters=0)
+    annealed = place(plan, topo, seed=0)
+    assert annealed.weighted_hops() <= seeded.weighted_hops()
+
+
+def test_placement_overflow_raises(rng):
+    plan = map_1d(_spec1d(rng), workers=4)
+    with pytest.raises(PlacementError):
+        place(plan, FabricTopology.mesh(2, 2, slots=1), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+def test_routes_are_legal_mesh_paths(rng):
+    plan = map_1d(_spec1d(rng), workers=4)
+    topo = FabricTopology.mesh(8, 8)
+    pl = place(plan, topo, seed=0)
+    rf = route(pl)
+    for e in plan.dfg.edges():
+        links = rf.route_for(e)
+        src, dst = pl.coords[e.src.nid], pl.coords[e.dst.nid]
+        assert len(links) == topo.distance(src, dst)   # XY routes are minimal
+        cur = src
+        for lk in links:
+            assert lk in topo.links                    # every hop is a wire
+            assert lk[0] == cur
+            cur = lk[1]
+        assert cur == dst
+
+
+def test_torus_wraps_shorter():
+    topo = FabricTopology.torus_grid(8, 8)
+    assert topo.distance((0, 0), (0, 7)) == 1
+    assert len(xy_route(topo, (0, 0), (0, 7))) == 1
+    mesh = FabricTopology.mesh(8, 8)
+    assert mesh.distance((0, 0), (0, 7)) == 7
+
+
+def test_route_channel_overflow_fails_loudly(rng):
+    plan = map_2d(heat_2d(18, 24, dtype="float64"), workers=3)
+    topo = FabricTopology.mesh(8, 8, channels=1)
+    pl = place(plan, topo, seed=0)
+    with pytest.raises(RouteError):
+        route(pl)
+    rf = route(pl, strict=False)                      # inspectable overload
+    assert rf.stats()["max_channel_load"] > 1
+
+
+# ---------------------------------------------------------------------------
+# network-aware simulation
+# ---------------------------------------------------------------------------
+def test_network_sim_1d_exact_and_no_faster(rng):
+    spec = _spec1d(rng)
+    x = rng.normal(size=spec.grid_shape[0])
+    ideal = simulate(map_1d(spec, workers=4), x, CGRA)
+    plan = map_1d(spec, workers=4)
+    rf = route(place(plan, FabricTopology.mesh(8, 8), seed=0))
+    routed = simulate(plan, x, CGRA, fabric=rf)
+    assert np.array_equal(ideal.output, routed.output)  # bit-identical
+    assert np.allclose(routed.output, stencil_reference_np(x, spec))
+    assert routed.cycles >= ideal.cycles
+    assert routed.fabric is not None
+    for key in ("hops_mean", "max_channel_load", "pe_utilization",
+                "token_hops", "stall_cycles", "hotspots"):
+        assert key in routed.fabric
+    assert "fabric:" in routed.summary()
+
+
+def test_network_sim_2d_exact_and_no_faster(rng):
+    spec = heat_2d(18, 24, dtype="float64")
+    x = rng.normal(size=(18, 24))
+    ideal = simulate(map_2d(spec, workers=3), x, CGRA)
+    plan = map_2d(spec, workers=3)
+    rf = route(place(plan, FabricTopology.mesh(8, 8), seed=1))
+    routed = simulate(plan, x, CGRA, fabric=rf)
+    assert np.array_equal(ideal.output, routed.output)
+    assert np.allclose(routed.output, stencil_reference_np(x, spec))
+    assert routed.cycles >= ideal.cycles
+    assert routed.fabric["token_hops"] > 0
+
+
+def test_tighter_bandwidth_is_slower(rng):
+    """Halving every link's words/cycle can only add contention stalls."""
+    spec = _spec1d(rng, n=120, r=1)
+    x = rng.normal(size=120)
+    runs = {}
+    for wpc in (4, 1):
+        plan = map_1d(spec, workers=3)
+        topo = FabricTopology.mesh(6, 6, words_per_cycle=wpc)
+        rf = route(place(plan, topo, seed=0))
+        runs[wpc] = simulate(plan, x, CGRA, fabric=rf)
+    assert np.array_equal(runs[4].output, runs[1].output)
+    assert runs[1].cycles >= runs[4].cycles
+    assert runs[1].fabric["stall_cycles"] >= runs[4].fabric["stall_cycles"]
+
+
+# ---------------------------------------------------------------------------
+# the paper's mappings on the paper's 16x16 fabric
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mk", [
+    lambda: map_1d(paper_stencil_1d(n=4800, rx=8), workers=8),
+    lambda: map_2d(paper_stencil_2d(ny=32, nx=64, r=12), workers=8),
+])
+def test_paper_mappings_place_and_route_16x16(mk):
+    plan = mk()
+    topo = FabricTopology.mesh(16, 16)
+    pl = place(plan, topo, seed=0)
+    rf = route(pl)                                    # strict: must fit
+    s = rf.stats()
+    assert s["max_channel_load"] <= 32
+    assert 0 < s["pe_utilization"] <= 1
+    assert s["hops_mean"] > 0
+
+
+# ---------------------------------------------------------------------------
+# configuration export
+# ---------------------------------------------------------------------------
+def test_config_exports_carry_coordinates(rng):
+    plan = map_1d(_spec1d(rng, n=60, r=1), workers=2)
+    rf = route(place(plan, FabricTopology.mesh(6, 6), seed=0))
+    asm = placed_assembly(rf)
+    assert "PE(" in asm and "route=[" in asm and "hops=" in asm
+    dot = placed_dot(rf)
+    assert "pos=" in dot and "digraph" in dot
+
+
+def test_route_directions_on_two_wide_mesh():
+    """On a 2-wide/2-tall *mesh* the torus wrap-delta (|d| == n-1 == 1)
+    collides with the opposite direction; W/N hops must not read as E/S."""
+    from repro.fabric.config import _direction
+    mesh = FabricTopology.mesh(4, 2)
+    assert _direction(((0, 1), (0, 0)), mesh) == "W"
+    assert _direction(((0, 0), (0, 1)), mesh) == "E"
+    tall = FabricTopology.mesh(2, 4)
+    assert _direction(((1, 0), (0, 0)), tall) == "N"
+    assert _direction(((0, 0), (1, 0)), tall) == "S"
+    torus = FabricTopology.torus_grid(4, 4)
+    assert _direction(((0, 0), (0, 3)), torus) == "W"   # wrap west
+    assert _direction(((0, 3), (0, 0)), torus) == "E"   # wrap east

@@ -12,6 +12,9 @@ Mapping invariants (the paper's interleave/filter algebra):
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mapping import map_1d
