@@ -1,6 +1,7 @@
 """Fabric place-and-route benchmark: the paper's mappings on a 16x16 mesh.
 
-Two parts per mapping (1D w=8, 2D w=8):
+Two parts per mapping (1D w=8, 2D w=8, 3D heat w=8 — the rank the
+dimension-generic ``map_nd`` adds):
   * **place+route at paper scale** — the full-radius DFG (17-pt r=8 / 49-pt
     r=12) is placed and routed on the paper's 16x16 fabric; reports weighted
     hop count, link congestion (max channel load / hot-spots) and fabric
@@ -15,8 +16,8 @@ import time
 
 import numpy as np
 
-from repro.core import CGRA, map_1d, map_2d, simulate
-from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+from repro.core import CGRA, map_1d, map_2d, map_3d, simulate
+from repro.core.spec import heat_3d, paper_stencil_1d, paper_stencil_2d
 from repro.fabric import FabricTopology, place, route
 
 
@@ -30,6 +31,8 @@ def run() -> list[tuple[str, float, str]]:
          paper_stencil_1d(n=2400, rx=8), map_1d, 8),
         ("stencil2d_w8", paper_stencil_2d(ny=449, nx=960, r=12),
          paper_stencil_2d(ny=32, nx=64, r=12), map_2d, 8),
+        ("stencil3d_w8", heat_3d(64, 64, 64, dtype="float64"),
+         heat_3d(10, 12, 16, dtype="float64"), map_3d, 8),
     ]
     for name, spec_full, spec_sim, mapper, w in cases:
         # --- place + route at paper scale --------------------------------

@@ -8,31 +8,125 @@ Prints ``name,us_per_call,derived`` CSV (assignment deliverable (d)).
   fusion_crossover  — §IV temporal fusion (beyond paper)
   vii_gpu_efficiency — §VII efficiency-vs-AI trend (incl. 3D stencils)
   fabric_bench      — place-and-route + network-aware sim on the 16x16 mesh
+
+``--artifact PATH`` additionally writes a JSON perf snapshot (cycles, GFLOPS,
+roofline %, fabric hop/stall stats for the 1D/2D/3D mappings) so the perf
+trajectory accumulates across PRs; ``--smoke`` shrinks the grids so CI can
+afford it (ci.sh runs ``--artifact BENCH_pr2.json --smoke --artifact-only``
+— the artifact refresh, not the full CSV sweep).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
+import time
 import traceback
 
-from benchmarks import (ai_table, fabric_bench, fig12_roofline,
-                        fusion_crossover, kernel_roofline, table1,
-                        vii_gpu_efficiency)
-
-MODULES = [ai_table, fig12_roofline, table1, kernel_roofline,
-           fusion_crossover, vii_gpu_efficiency, fabric_bench]
+if __package__ in (None, ""):      # script mode: `python benchmarks/run.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
+def artifact_cases(smoke: bool) -> dict:
+    """One entry per rank: ideal + routed simulation on the 16x16 mesh."""
+    import numpy as np
+
+    from repro.core import CGRA, map_1d, map_2d, map_3d, simulate
+    from repro.core.spec import heat_3d, paper_stencil_1d, paper_stencil_2d
+    from repro.fabric import FabricTopology, place, route
+
+    if smoke:
+        specs = [("1d", paper_stencil_1d(n=1200, rx=8), map_1d, 8),
+                 ("2d", paper_stencil_2d(ny=30, nx=48, r=12), map_2d, 8),
+                 ("3d", heat_3d(10, 12, 16, dtype="float64"), map_3d, 8)]
+    else:
+        specs = [("1d", paper_stencil_1d(n=9720, rx=8), map_1d, 8),
+                 ("2d", paper_stencil_2d(ny=64, nx=128, r=12), map_2d, 8),
+                 ("3d", heat_3d(16, 24, 32, dtype="float64"), map_3d, 8)]
+
+    rng = np.random.default_rng(0)
+    topo = FabricTopology.mesh(16, 16)
+    cases = {}
+    for name, spec, mapper, w in specs:
+        x = rng.normal(size=spec.grid_shape)
+        plan_ideal = mapper(spec, workers=w)
+        plan = mapper(spec, workers=w)
+        rf = route(place(plan, topo, seed=0))
+        t0 = time.perf_counter()
+        ideal = simulate(plan_ideal, x, CGRA)
+        routed = simulate(plan, x, CGRA, fabric=rf)
+        wall_s = time.perf_counter() - t0      # the two simulate() calls only
+        assert np.array_equal(ideal.output, routed.output)
+        s = rf.stats()
+        cases[name] = {
+            "grid": list(spec.grid_shape), "radii": list(spec.radii),
+            "workers": w, "pe_instructions": len(plan.dfg.nodes),
+            "cycles_ideal": ideal.cycles, "cycles_routed": routed.cycles,
+            "inflation": round(routed.cycles / ideal.cycles, 4),
+            "gflops_ideal": round(ideal.gflops, 3),
+            "gflops_routed": round(routed.gflops, 3),
+            "pct_of_roofline_ideal": round(ideal.pct_of_roofline, 4),
+            "pct_of_roofline_routed": round(routed.pct_of_roofline, 4),
+            "hops_mean": s["hops_mean"], "hops_max": s["hops_max"],
+            "weighted_hops": s["weighted_hops"],
+            "max_channel_load": s["max_channel_load"],
+            "pe_utilization": s["pe_utilization"],
+            "token_hops": routed.fabric["token_hops"],
+            "stall_cycles": routed.fabric["stall_cycles"],
+            "sim_wall_s": round(wall_s, 3),
+        }
+    return cases
+
+
+def write_artifact(path: str, smoke: bool) -> None:
+    art = {
+        "schema": "bench_pr2/v1",
+        "config": "smoke" if smoke else "full",
+        "fabric": "mesh16x16",
+        "cases": artifact_cases(smoke),
+    }
+    with open(path, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", file=sys.stderr)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifact", metavar="PATH",
+                    help="write the JSON perf snapshot to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grids (fast CI configuration)")
+    ap.add_argument("--artifact-only", action="store_true",
+                    help="skip the CSV benchmark modules (needs --artifact)")
+    args = ap.parse_args(argv)
+    if args.artifact_only and not args.artifact:
+        ap.error("--artifact-only requires --artifact PATH")
+
     failed = 0
-    for mod in MODULES:
+    if not args.artifact_only:
+        from benchmarks import (ai_table, fabric_bench, fig12_roofline,
+                                fusion_crossover, kernel_roofline, table1,
+                                vii_gpu_efficiency)
+        modules = [ai_table, fig12_roofline, table1, kernel_roofline,
+                   fusion_crossover, vii_gpu_efficiency, fabric_bench]
+        print("name,us_per_call,derived")
+        for mod in modules:
+            try:
+                for name, us, derived in mod.run():
+                    print(f"{name},{us:.1f},{derived}")
+                    sys.stdout.flush()
+            except Exception as e:
+                failed += 1
+                print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
+                traceback.print_exc(file=sys.stderr)
+
+    if args.artifact:
         try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}")
-                sys.stdout.flush()
-        except Exception as e:
+            write_artifact(args.artifact, args.smoke)
+        except Exception:
             failed += 1
-            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
     if failed:
         sys.exit(1)

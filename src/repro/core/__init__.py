@@ -1,13 +1,17 @@
 """The paper's contribution: stencil specs, CGRA mapping, simulation, roofline."""
-from repro.core.spec import StencilSpec, heat_2d, paper_stencil_1d, paper_stencil_2d
+from repro.core.spec import (StencilSpec, heat_2d, heat_3d, paper_stencil_1d,
+                             paper_stencil_2d, star_3d)
 from repro.core.reference import stencil_reference, stencil_reference_np
 from repro.core.roofline import CGRA, TPU_V5E, V100, Machine, analyze, TpuRooflineTerms
-from repro.core.mapping import MappingPlan, map_1d, map_2d, plan_blocks
+from repro.core.mapping import (BlockPlan, MappingPlan, map_1d, map_2d,
+                                map_3d, map_nd, plan_blocks)
 from repro.core.simulator import SimDeadlock, SimResult, simulate
 from repro.core.temporal import crossover_timesteps, fusion_report
 
-__all__ = ["StencilSpec", "heat_2d", "paper_stencil_1d", "paper_stencil_2d",
-           "stencil_reference", "stencil_reference_np", "CGRA", "TPU_V5E",
-           "V100", "Machine", "analyze", "TpuRooflineTerms", "MappingPlan",
-           "map_1d", "map_2d", "plan_blocks", "SimDeadlock", "SimResult",
-           "simulate", "crossover_timesteps", "fusion_report"]
+__all__ = ["StencilSpec", "heat_2d", "heat_3d", "paper_stencil_1d",
+           "paper_stencil_2d", "star_3d", "stencil_reference",
+           "stencil_reference_np", "CGRA", "TPU_V5E", "V100", "Machine",
+           "analyze", "TpuRooflineTerms", "BlockPlan", "MappingPlan",
+           "map_1d", "map_2d", "map_3d", "map_nd", "plan_blocks",
+           "SimDeadlock", "SimResult", "simulate", "crossover_timesteps",
+           "fusion_report"]

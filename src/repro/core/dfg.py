@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Optional
 
 FLOPS_PER_OP = {"mul": 1, "mac": 2, "add": 1}
 
@@ -63,13 +63,6 @@ class Node:
     in_edges: list = dataclasses.field(default_factory=list)   # port-ordered
     out_edges: list = dataclasses.field(default_factory=list)  # broadcast set
     fires: int = 0
-
-    # runtime hooks installed by the simulator ------------------------------
-    def ready_inputs(self) -> bool:
-        return all(e.q for e in self.in_edges)
-
-    def outputs_free(self) -> bool:
-        return all(not e.full() for e in self.out_edges)
 
 
 class DFG:

@@ -1,0 +1,36 @@
+"""Stencil → CGRA dataflow-graph mapping (paper §III), dimension-generic.
+
+The package decomposes the paper's worker pipeline into composable stages
+(:mod:`~repro.core.mapping.stages`) over a single stream algebra
+(:mod:`~repro.core.mapping.streams`) and builds every rank's mapping with one
+entry point, :func:`map_nd` (:mod:`~repro.core.mapping.nd`):
+
+* ``w`` **reader workers** load the grid interleaved in flat row-major order
+  (reader ``k`` owns sites ``k, k+w, k+2w, ...``).
+* ``w`` **compute workers** per temporal layer: per-axis filter + MUL/MAC
+  tap chains (the ``0^m 1^n 0^p`` keep patterns of §III-A generalized to one
+  digit window per axis) joined by an axis-combining ADD tree.
+* ``w`` **writer** and **sync workers** store the final layer's outputs and
+  count them against analytically known expectations (§III-A).
+
+``map_1d``/``map_2d`` are thin wrappers that assert the structural contract
+of the pre-refactor hand-rolled builders; ``map_3d`` (and any higher rank)
+falls out of the same construction.  Mandatory buffering (§III-B) is derived
+per axis — see :mod:`~repro.core.mapping.stages` — and ``plan_blocks``
+(:mod:`~repro.core.mapping.blocks`) strip-mines grids whose innermost extent
+does not divide by ``w``.
+"""
+from repro.core.mapping.blocks import BlockPlan, plan_blocks
+from repro.core.mapping.nd import map_1d, map_2d, map_3d, map_nd
+from repro.core.mapping.plan import MappingPlan
+from repro.core.mapping.stages import (AddTree, ReaderBank, SyncTree,
+                                       TapChain, WorkerStream, WriterBank,
+                                       layer_stream, reader_stream,
+                                       row_tokens, source_worker, tap_bands)
+from repro.core.mapping.streams import KeepMask, StreamSpec, band_keep
+
+__all__ = ["BlockPlan", "plan_blocks", "map_1d", "map_2d", "map_3d",
+           "map_nd", "MappingPlan", "AddTree", "ReaderBank", "SyncTree",
+           "TapChain", "WorkerStream", "WriterBank", "layer_stream",
+           "reader_stream", "row_tokens", "source_worker", "tap_bands",
+           "KeepMask", "StreamSpec", "band_keep"]

@@ -1,0 +1,56 @@
+"""Strip-mining / blocking planner (§III-B "Blocking") — also reused by the
+TPU kernels to pick BlockSpec tiles under a VMEM budget."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.spec import StencilSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    block_shape: tuple[int, ...]
+    halo: tuple[int, ...]
+    grid: tuple[int, ...]               # number of blocks per axis
+    working_set_bytes: int
+    storage_budget_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.working_set_bytes <= self.storage_budget_bytes
+
+
+def plan_blocks(spec: StencilSpec, storage_budget_bytes: int,
+                lane_multiple: int = 128) -> BlockPlan:
+    """Choose per-axis block sizes so (block + 2*halo) working sets fit the
+    on-fabric storage (CGRA scratchpad or TPU VMEM).
+
+    Strategy (paper: vertical strips sized so ``2*ry*block_size`` fits):
+    keep the innermost axis in lane_multiple chunks as large as possible,
+    then grow outer axes.
+    """
+    halo = tuple(r * spec.timesteps for r in spec.radii)
+    b = spec.bytes_per_elem
+    shape = list(spec.grid_shape)
+    block = [min(s, 8) for s in shape]
+    block[-1] = min(shape[-1], lane_multiple)
+
+    def ws(blk):  # in + out working set with halos
+        inner = math.prod(bb + 2 * h for bb, h in zip(blk, halo))
+        return (inner + math.prod(blk)) * b
+
+    # grow innermost first, then outer axes round-robin
+    order = list(range(spec.ndim - 1, -1, -1))
+    progress = True
+    while progress:
+        progress = False
+        for ax in order:
+            step = lane_multiple if ax == spec.ndim - 1 else 8
+            cand = list(block)
+            cand[ax] = min(shape[ax], cand[ax] + step)
+            if cand[ax] != block[ax] and ws(cand) <= storage_budget_bytes:
+                block = cand
+                progress = True
+    grid = tuple(math.ceil(s / bb) for s, bb in zip(shape, block))
+    return BlockPlan(tuple(block), halo, grid, ws(block), storage_budget_bytes)

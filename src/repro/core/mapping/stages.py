@@ -1,0 +1,223 @@
+"""Composable worker-pipeline stages (paper §III, dimension-generic).
+
+The paper builds every mapping out of the same five stage families; each is a
+small builder over the DFG DSL here, parameterized by rank through the
+:mod:`repro.core.mapping.streams` algebra:
+
+* :class:`ReaderBank` — ``w`` interleaved load streams (reader ``k`` owns the
+  flat row-major sites ``≡ k (mod w)``; for rank >= 2 this is the paper's
+  column ownership, which requires ``n_inner % w == 0``).
+* :class:`TapChain` — one axis of one compute worker: a data-filtering PE per
+  tap (generalized ``0^m 1^n 0^p`` keep-mask) feeding a MUL -> MAC -> ... -> MAC
+  chain.  The innermost axis has ``2r+1`` taps sourced from ``2r+1``
+  *different* streams; every outer axis has ``2r`` taps (centre shared) all
+  sourced from the *one* stream that owns the worker's innermost class.
+* :class:`AddTree` — joins the per-axis chain tails of a worker (rank-1
+  workers have a single chain and no ADDs; rank ``d`` needs ``d-1``).
+* :class:`WriterBank` — per-worker address generator + store.
+* :class:`SyncTree` — per-worker store counters combined into one ``done``.
+
+Mandatory buffering (§III-B) is derived per tap, not per special case: with
+``row_tokens[b]`` = filtered tokens per unit step along axis ``b`` and
+``gate`` = the chain-wide worst-case token lag ``max_b r_b * row_tokens[b]``,
+a tap at offset ``o`` on axis ``a`` must queue
+
+    max(2, gate - o * row_tokens[a] + 2)
+
+tokens: its values arrive that many outputs ahead of the slowest tap of the
+worker.  At rank 1 this is the familiar ``2r - j + 2``; at rank 2 it is the
+paper's ~``2*ry`` resident rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dfg import DFG, Node
+from repro.core.mapping.streams import (StreamSpec, band_keep,
+                                        row_major_strides)
+from repro.core.spec import StencilSpec
+
+
+@dataclasses.dataclass
+class WorkerStream:
+    """A producing node together with the site stream it emits."""
+    node: Node
+    spec: StreamSpec
+
+
+# ---------------------------------------------------------------------------
+# stream geometry (the worker-selection / band rules proved in streams.py)
+# ---------------------------------------------------------------------------
+def reader_stream(spec: StencilSpec, k: int, workers: int) -> StreamSpec:
+    """Reader ``k``'s interleaved load stream."""
+    if spec.ndim == 1:
+        return StreamSpec(((k, spec.grid_shape[0], workers),))
+    outer = tuple((0, n, 1) for n in spec.grid_shape[:-1])
+    return StreamSpec(outer + ((k, spec.grid_shape[-1], workers),))
+
+
+def layer_stream(spec: StencilSpec, layer: int, worker: int,
+                 workers: int) -> StreamSpec:
+    """Compute worker ``worker``'s output stream after ``layer`` fused sweeps:
+    the interior shrunk by ``layer*r`` per face, innermost axis in the
+    worker's congruence class."""
+    axes = []
+    for b, (n, r) in enumerate(zip(spec.grid_shape, spec.radii)):
+        if b == spec.ndim - 1:
+            axes.append((layer * r + worker, n - layer * r, workers))
+        else:
+            axes.append((layer * r, n - layer * r, 1))
+    return StreamSpec(tuple(axes))
+
+
+def tap_bands(spec: StencilSpec, layer: int, worker: int, axis: int,
+              offset: int) -> tuple[tuple[int, int], ...]:
+    """Coordinate bands ``[lo, hi)`` of the sites tap ``(axis, offset)`` of
+    ``worker`` needs at ``layer`` — the worker's output box shifted by
+    ``offset`` along ``axis``."""
+    bands = []
+    for b, (n, r) in enumerate(zip(spec.grid_shape, spec.radii)):
+        ob = offset if b == axis else 0
+        lo = layer * r + ob + (worker if b == spec.ndim - 1 else 0)
+        bands.append((lo, n - layer * r + ob))
+    return tuple(bands)
+
+
+def source_worker(spec: StencilSpec, worker: int, axis: int, offset: int,
+                  workers: int) -> int:
+    """Index of the producing stream (reader or previous-layer worker) that
+    owns the innermost congruence class tap ``(axis, offset)`` needs.  The
+    same rule holds at every layer: readers sit at inner base 0 and layer
+    ``t-1`` workers at inner base ``(t-1)*r``, so the class delta is always
+    ``r_inner + worker (+ offset on the innermost axis)``."""
+    o_inner = offset if axis == spec.ndim - 1 else 0
+    return (spec.radii[-1] + worker + o_inner) % workers
+
+
+def row_tokens(out_counts: tuple[int, ...]) -> tuple[int, ...]:
+    """Filtered tokens per unit step along each axis, for one worker whose
+    per-axis output counts are ``out_counts`` — the row-major strides of the
+    output box."""
+    return row_major_strides(out_counts)
+
+
+# ---------------------------------------------------------------------------
+# stages
+# ---------------------------------------------------------------------------
+class ReaderBank:
+    """``w`` reader workers: per-reader address generator + load."""
+
+    def __init__(self, g: DFG, spec: StencilSpec, workers: int,
+                 queue_capacity: int | None):
+        self.streams: list[WorkerStream] = []
+        self.loads: list[list[int]] = []
+        for k in range(workers):
+            stream = reader_stream(spec, k, workers)
+            idx = stream.flat_indices(spec.grid_shape)
+            addr = g.add("addr", f"rd_addr{k}", stage="reader", worker=k,
+                         count=len(idx))
+            load = g.add("load", f"rd{k}", stage="reader", worker=k,
+                         indices=idx)
+            g.connect(addr, load, capacity=queue_capacity)
+            self.streams.append(WorkerStream(load, stream))
+            self.loads.append(idx)
+
+
+class TapChain:
+    """One axis of one compute worker in one layer: per-tap filter + MUL/MAC.
+
+    ``center_extra`` is added to the centre-tap coefficient (the innermost
+    chain carries every axis's centre contribution once, §III-B).
+    """
+
+    def __init__(self, g: DFG, spec: StencilSpec, *, layer: int, worker: int,
+                 axis: int, sources: list[WorkerStream], workers: int,
+                 queue_capacity: int | None, min_caps: dict[int, int],
+                 rt: tuple[int, ...], gate: int, center_extra: float = 0.0):
+        d = spec.ndim
+        r = spec.radii[axis]
+        coeffs = spec.coeffs[axis]
+        inner = axis == d - 1
+        taps = list(range(2 * r + 1)) if inner else \
+            [j for j in range(2 * r + 1) if j != r]
+        assert taps, "outer axis with radius 0 has no taps; skip the chain"
+        prev: Node | None = None
+        for j in taps:
+            o = j - r
+            src = sources[source_worker(spec, worker, axis, o, workers)]
+            mask = band_keep(src.spec, tap_bands(spec, layer, worker, axis, o))
+            f = g.add("filter", f"flt_l{layer}_a{axis}_w{worker}_t{j}",
+                      stage="compute", worker=worker, layer=layer, axis=axis,
+                      m=mask.lead, n=mask.kept, keep=mask.keep,
+                      keep_count=mask.kept)
+            g.connect(src.node, f, capacity=queue_capacity)
+            coeff = float(coeffs[j]) + (center_extra if j == r else 0.0)
+            op = "mul" if prev is None else "mac"
+            pe = g.add(op, f"{op}_l{layer}_a{axis}_w{worker}_t{j}",
+                       stage="compute", worker=worker, coeff=coeff,
+                       layer=layer, axis=axis)
+            if prev is not None:
+                g.connect(prev, pe, port=0, capacity=queue_capacity)
+            e = g.connect(f, pe, port=(0 if prev is None else 1),
+                          capacity=queue_capacity)
+            # mandatory buffering: this tap's values arrive up to
+            # gate - o*rt[axis] outputs before the worker can consume them.
+            min_caps[id(e)] = max(2, gate - o * rt[axis] + 2)
+            prev = pe
+        self.axis = axis
+        self.radius = r
+        self.tail: Node = prev
+
+
+class AddTree:
+    """Joins a worker's per-axis chain tails: innermost chain first, then one
+    ADD per outer chain (rank-1 workers pass through untouched)."""
+
+    def __init__(self, g: DFG, chains: list[TapChain], *, layer: int,
+                 worker: int, queue_capacity: int | None,
+                 min_caps: dict[int, int], rt: tuple[int, ...], gate: int):
+        tail = chains[0].tail
+        for i, ch in enumerate(chains[1:]):
+            addn = g.add("add", f"axis_add_l{layer}_w{worker}_{i}",
+                         stage="compute", worker=worker, layer=layer)
+            e_part = g.connect(tail, addn, port=0, capacity=queue_capacity)
+            # the partial side leads the remaining (slower) outer chains by
+            # up to the full gate; the joining chain only by its own slack.
+            min_caps[id(e_part)] = gate + 2
+            e_chain = g.connect(ch.tail, addn, port=1,
+                                capacity=queue_capacity)
+            min_caps[id(e_chain)] = max(
+                2, gate - ch.radius * rt[ch.axis] + 2)
+            tail = addn
+        self.tail: Node = tail
+
+
+class WriterBank:
+    """Per-worker address generator + store for the final layer's outputs."""
+
+    def __init__(self, g: DFG, tails: list[Node], out_idx: list[list[int]],
+                 queue_capacity: int | None):
+        self.stores: list[Node] = []
+        for c, tail in enumerate(tails):
+            addr = g.add("addr", f"wr_addr{c}", stage="writer", worker=c,
+                         count=len(out_idx[c]))
+            st = g.add("store", f"wr{c}", stage="writer", worker=c,
+                       indices=out_idx[c])
+            g.connect(addr, st, port=0, capacity=queue_capacity)
+            g.connect(tail, st, port=1, capacity=queue_capacity)
+            self.stores.append(st)
+
+
+class SyncTree:
+    """Per-worker store counters combined into the single ``done`` trigger."""
+
+    def __init__(self, g: DFG, stores: list[Node], expected: list[int],
+                 queue_capacity: int | None):
+        self.done = g.add("cmp", "done", stage="sync", worker=-1)
+        self.syncs: list[Node] = []
+        for c, (st, exp) in enumerate(zip(stores, expected)):
+            sy = g.add("sync", f"sync{c}", stage="sync", worker=c,
+                       expected=exp)
+            g.connect(st, sy, capacity=queue_capacity)
+            g.connect(sy, self.done, capacity=queue_capacity)
+            self.syncs.append(sy)

@@ -189,6 +189,18 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     n_mem = max(1, len(mem_nodes))
 
     nodes = g.nodes
+    # hot-loop records: (node, nid, op, state, in_edges, out_edges) resolved
+    # once — the edge lists are stable for the whole simulation, and skipping
+    # the per-cycle attribute lookups is a measurable win on large graphs.
+    # Eligibility snapshots are flat lists indexed by nid (nids are dense).
+    rec = {nd.nid: (nd, nd.nid, nd.op, state[nd.nid], nd.in_edges,
+                    nd.out_edges) for nd in nodes}
+    snap_recs = [rec[nd.nid] for nd in nodes]
+    mem_recs = [rec[nd.nid] for nd in mem_nodes]
+    other_recs = [rec[nd.nid] for nd in other_nodes]
+    n_ids = 1 + max(nd.nid for nd in nodes)
+    in_avail = [False] * n_ids
+    out_free = [False] * n_ids
     while not finished:
         if cycles >= max_cycles:
             raise SimDeadlock(f"exceeded max_cycles={max_cycles}")
@@ -197,53 +209,48 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
         if net is not None:
             net.deliver(cycles)          # arrivals land before the snapshot
         # phase 1: snapshot eligibility -----------------------------------
-        in_avail = {}
-        out_free = {}
         if net is None:
-            for nd in nodes:
-                in_avail[nd.nid] = all(e.q for e in nd.in_edges)
-                out_free[nd.nid] = all(not e.full() for e in nd.out_edges)
+            for _, nid, _, _, ine, oute in snap_recs:
+                in_avail[nid] = all(e.q for e in ine)
+                out_free[nid] = all(not e.full() for e in oute)
         else:
-            for nd in nodes:
-                in_avail[nd.nid] = all(e.q for e in nd.in_edges)
-                out_free[nd.nid] = all(not net.edge_full(e)
-                                       for e in nd.out_edges)
+            for _, nid, _, _, ine, oute in snap_recs:
+                in_avail[nid] = all(e.q for e in ine)
+                out_free[nid] = all(not net.edge_full(e) for e in oute)
         any_fired = False
         # phase 2: execute. Memory nodes first in rotated order (fair
         # bandwidth arbitration), then the rest.
         rot = cycles % n_mem
-        ordered = mem_nodes[rot:] + mem_nodes[:rot] + other_nodes
-        for nd in ordered:
-            st = state[nd.nid]
-            op = nd.op
+        ordered = mem_recs[rot:] + mem_recs[:rot] + other_recs
+        for nd, nid, op, st, in_edges, out_edges in ordered:
             if op == "addr":
-                if st["k"] >= nd.params["count"] or not out_free[nd.nid]:
+                if st["k"] >= nd.params["count"] or not out_free[nid]:
                     continue
                 v = st["k"]
                 st["k"] += 1
             elif op == "load":
-                if not (in_avail[nd.nid] and out_free[nd.nid] and credit >= 1.0):
+                if not (in_avail[nid] and out_free[nid] and credit >= 1.0):
                     continue
-                a = nd.in_edges[0].q.popleft()
+                a = in_edges[0].q.popleft()
                 v = float(flat_in[nd.params["indices"][a]])
                 credit -= 1.0
                 loads += 1
             elif op == "store":
-                if not (in_avail[nd.nid] and out_free[nd.nid] and credit >= 1.0):
+                if not (in_avail[nid] and out_free[nid] and credit >= 1.0):
                     continue
-                a = nd.in_edges[0].q.popleft()
-                val = nd.in_edges[1].q.popleft()
+                a = in_edges[0].q.popleft()
+                val = in_edges[1].q.popleft()
                 flat_out[nd.params["indices"][a]] = val
                 credit -= 1.0
                 stores += 1
                 v = 1  # done token to sync
             elif op == "filter":
-                if not in_avail[nd.nid]:
+                if not in_avail[nid]:
                     continue
                 keep = nd.params["keep"](st["k"])
-                if keep and not out_free[nd.nid]:
+                if keep and not out_free[nid]:
                     continue  # must hold the token until downstream has space
-                tok = nd.in_edges[0].q.popleft()
+                tok = in_edges[0].q.popleft()
                 st["k"] += 1
                 if not keep:
                     fires[op] = fires.get(op, 0) + 1
@@ -251,51 +258,51 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
                     continue
                 v = tok
             elif op == "mul":
-                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                if not (in_avail[nid] and out_free[nid]):
                     continue
-                v = nd.params["coeff"] * nd.in_edges[0].q.popleft()
+                v = nd.params["coeff"] * in_edges[0].q.popleft()
                 flops += 1
             elif op == "mac":
-                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                if not (in_avail[nid] and out_free[nid]):
                     continue
-                p = nd.in_edges[0].q.popleft()
-                v = p + nd.params["coeff"] * nd.in_edges[1].q.popleft()
+                p = in_edges[0].q.popleft()
+                v = p + nd.params["coeff"] * in_edges[1].q.popleft()
                 flops += 2
             elif op == "add":
-                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                if not (in_avail[nid] and out_free[nid]):
                     continue
-                v = nd.in_edges[0].q.popleft() + nd.in_edges[1].q.popleft()
+                v = in_edges[0].q.popleft() + in_edges[1].q.popleft()
                 flops += 1
             elif op == "sync":
-                if st["emitted"] or not in_avail[nd.nid]:
+                if st["emitted"] or not in_avail[nid]:
                     continue
-                nd.in_edges[0].q.popleft()
+                in_edges[0].q.popleft()
                 st["count"] += 1
                 fires[op] = fires.get(op, 0) + 1
                 any_fired = True
-                if st["count"] == nd.params["expected"] and out_free[nd.nid]:
+                if st["count"] == nd.params["expected"] and out_free[nid]:
                     st["emitted"] = True
                     v = 1
                 else:
                     continue
             elif op == "cmp":  # the final done-combiner
-                if not in_avail[nd.nid]:
+                if not in_avail[nid]:
                     continue
-                for e in nd.in_edges:
+                for e in in_edges:
                     e.q.popleft()
                 finished = True
                 fires[op] = fires.get(op, 0) + 1
                 any_fired = True
                 continue
             else:  # mux/demux/copy pass-through
-                if not (in_avail[nd.nid] and out_free[nd.nid]):
+                if not (in_avail[nid] and out_free[nid]):
                     continue
-                v = nd.in_edges[0].q.popleft()
+                v = in_edges[0].q.popleft()
             nd.fires += 1
             fires[op] = fires.get(op, 0) + 1
             any_fired = True
             if net is None:
-                for e in nd.out_edges:
+                for e in out_edges:
                     e.push(v)
             else:
                 net.broadcast(nd, v, cycles)

@@ -7,7 +7,7 @@ taps ``in[i-r] .. in[i+r]``; the 5-point 2D Jacobian has taps along x and y.
 
 ``StencilSpec`` is the single source of truth consumed by:
   * the pure-jnp oracle           (core/reference.py)
-  * the CGRA mapper + simulator   (core/mapping.py, core/simulator.py)
+  * the CGRA mapper + simulator   (core/mapping/, core/simulator.py)
   * the roofline model            (core/roofline.py)
   * the TPU kernels               (kernels/stencil1d, kernels/stencil2d)
 """
@@ -18,6 +18,8 @@ import math
 from typing import Sequence
 
 import numpy as np
+
+_ITEMSIZE = {"float32": 4, "float64": 8, "bfloat16": 2}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,8 +87,7 @@ class StencilSpec:
 
     @property
     def bytes_per_elem(self) -> int:
-        return np.dtype(np.float32 if self.dtype == "bfloat16" else self.dtype).itemsize \
-            if self.dtype != "bfloat16" else 2
+        return _ITEMSIZE.get(self.dtype) or np.dtype(self.dtype).itemsize
 
     @property
     def flops_per_output(self) -> int:
@@ -105,8 +106,16 @@ class StencilSpec:
         return sum(2 * r for r in self.radii) + 1
 
     def total_flops(self, timesteps: int | None = None) -> int:
-        t = self.timesteps if timesteps is None else t if (t := timesteps) else 1
-        return self.flops_per_output * math.prod(self.interior_shape) * t
+        """Flops of ``timesteps`` fused sweeps: each sweep computes only the
+        outputs with full support, so sweep ``k`` covers the interior shrunk
+        by ``r*(k+1)`` per face (matches ``arithmetic_intensity_fused``)."""
+        t = self.timesteps if timesteps is None else timesteps
+        if t < 1:
+            raise ValueError(f"timesteps must be >= 1, got {t}")
+        return self.flops_per_output * sum(
+            math.prod(tuple(max(0, n - 2 * r * (k + 1))
+                            for n, r in zip(self.grid_shape, self.radii)))
+            for k in range(t))
 
     def arithmetic_intensity(self) -> float:
         """Flops/byte exactly as §VI computes it: interior flops over one full
@@ -152,3 +161,23 @@ def heat_2d(ny: int, nx: int, alpha: float = 0.1, dtype: str = "float32") -> Ste
     cy = (alpha, 1.0 - 4.0 * alpha, alpha)
     cx = (alpha, 0.0, alpha)
     return StencilSpec((ny, nx), (1, 1), (cy, cx), dtype=dtype)
+
+
+def heat_3d(nz: int, ny: int, nx: int, alpha: float = 0.1,
+            dtype: str = "float32") -> StencilSpec:
+    """7-pt Jacobi heat step: u += alpha * laplacian(u) over (z, y, x)."""
+    cz = (alpha, 1.0 - 6.0 * alpha, alpha)
+    cyx = (alpha, 0.0, alpha)
+    return StencilSpec((nz, ny, nx), (1, 1, 1), (cz, cyx, cyx), dtype=dtype)
+
+
+def star_3d(nz: int, ny: int, nx: int, r: int = 2, seed: int = 2,
+            dtype: str = "float64") -> StencilSpec:
+    """(6r+1)-pt 3D star with random coefficients (centre counted on axis 0)."""
+    rng = np.random.default_rng(seed)
+    cz, cy, cx = (rng.normal(size=2 * r + 1) / (6 * r + 1) for _ in range(3))
+    cy[r] = 0.0
+    cx[r] = 0.0
+    return StencilSpec((nz, ny, nx), (r, r, r),
+                       (tuple(map(float, cz)), tuple(map(float, cy)),
+                        tuple(map(float, cx))), dtype=dtype)

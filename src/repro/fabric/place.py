@@ -94,6 +94,16 @@ def _stage_rank(n: Node) -> int:
     return {"reader": 0, "compute": 1, "writer": 2, "sync": 3}.get(n.stage, 4)
 
 
+def _seed_key(n: Node) -> tuple:
+    """Greedy-seed order: worker pipeline by worker pipeline, and *within* a
+    compute worker one axis tap-chain at a time (rank-3 workers carry three
+    chains plus an ADD tree; interleaving them would scatter each MUL→MAC
+    string across the fabric before annealing starts).  Temporal layers are
+    kept together the same way."""
+    return (n.worker, _stage_rank(n), n.params.get("layer", 0),
+            -n.params.get("axis", -1), n.nid)
+
+
 def _snake(topo: FabricTopology) -> list[Coord]:
     out = []
     for r in range(topo.rows):
@@ -106,16 +116,24 @@ def place(plan: MappingPlan, topo: FabricTopology, *, seed: int = 0,
           anneal_iters: int | None = None) -> Placement:
     """Place every DFG node on a capability-compatible PE slot."""
     g = plan.dfg
-    nodes = sorted(g.nodes, key=lambda n: (n.worker, _stage_rank(n), n.nid))
+    nodes = sorted(g.nodes, key=_seed_key)
     if len(nodes) > topo.total_slots():
         raise PlacementError(
             f"{len(nodes)} instructions exceed {topo.total_slots()} PE slots "
             f"on {topo!r}")
-    n_mem = sum(1 for n in nodes if op_class(n.op) == "mem")
-    if n_mem > topo.total_slots("mem"):
-        raise PlacementError(
-            f"{n_mem} memory ops exceed {topo.total_slots('mem')} mem-capable "
-            f"slots (fabric boundary)")
+    # per-capability-class budgets: deep multi-chain workers (3D, fused
+    # layers) are alu/util-heavy, so check every class, not just mem.
+    demand: dict[str, int] = {}
+    for n in nodes:
+        cls = op_class(n.op)
+        demand[cls] = demand.get(cls, 0) + 1
+    for cls, need in demand.items():
+        have = topo.total_slots(cls)
+        if need > have:
+            where = " (fabric boundary)" if cls == "mem" else ""
+            raise PlacementError(
+                f"{need} {cls!r} ops exceed {have} {cls}-capable slots"
+                f"{where}")
 
     # --- phase 1: greedy snake-order seed -----------------------------------
     order = _snake(topo)

@@ -13,18 +13,45 @@ import jax.numpy as jnp
 from repro.kernels.stencil3d.kernel import stencil3d_pallas
 from repro.kernels.stencil3d.ref import stencil3d_ref
 
+# default per-core VMEM budget for auto-blocking (v5e has 128 MiB; leave
+# headroom for the 7 halo views + double buffering the kernel allocates).
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
 
 def _next_multiple(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _auto_block(shape: tuple[int, int, int], cz, cy, cx,
+                dtype: str, budget: int) -> tuple[int, int, int]:
+    """Pick (bz, by, bx) with the CGRA strip-mining planner (§III-B): the
+    same ``plan_blocks`` that sizes scratchpad strips sizes VMEM tiles."""
+    from repro.core.mapping import plan_blocks
+    from repro.core.spec import StencilSpec
+    spec = StencilSpec(shape, tuple((len(c) - 1) // 2 for c in (cz, cy, cx)),
+                       (tuple(cz), tuple(cy), tuple(cx)), dtype=dtype)
+    bz, by, bx = plan_blocks(spec, budget, lane_multiple=128).block_shape
+    # TPU sublane tiling holds by construction: plan_blocks seeds the y axis
+    # at min(ny, 8) and only grows it in +8 steps.
+    assert by == shape[1] or by % 8 == 0
+    return (bz, by, bx)
+
+
 def stencil3d(x: jax.Array, cz, cy, cx, *, timesteps: int = 1,
               backend: str = "auto",
-              block: tuple[int, int, int] = (8, 16, 128)) -> jax.Array:
-    """Batched 3D star stencil over the last three axes (z, y, x)."""
+              block: tuple[int, int, int] | None = (8, 16, 128),
+              vmem_budget_bytes: int = _VMEM_BUDGET_BYTES) -> jax.Array:
+    """Batched 3D star stencil over the last three axes (z, y, x).
+
+    ``block=None`` derives the tile from :func:`repro.core.mapping.plan_blocks`
+    under ``vmem_budget_bytes`` instead of using a fixed shape.
+    """
     cz = tuple(float(c) for c in cz)
     cy = tuple(float(c) for c in cy)
     cx = tuple(float(c) for c in cx)
+    if block is None:
+        block = _auto_block(x.shape[-3:], cz, cy, cx, str(x.dtype),
+                            vmem_budget_bytes)
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend == "xla":
