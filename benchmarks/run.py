@@ -11,9 +11,11 @@ Prints ``name,us_per_call,derived`` CSV (assignment deliverable (d)).
 
 ``--artifact PATH`` additionally writes a JSON perf snapshot (cycles, GFLOPS,
 roofline %, fabric hop/stall stats for the 1D/2D/3D mappings) so the perf
-trajectory accumulates across PRs; ``--smoke`` shrinks the grids so CI can
-afford it (ci.sh runs ``--artifact BENCH_pr2.json --smoke --artifact-only``
-— the artifact refresh, not the full CSV sweep).
+trajectory accumulates across PRs; ``--program-artifact PATH`` writes the
+program-pipeline snapshot (BENCH_pr3.json: fused multi-op DAGs vs separate
+store-to-memory sweeps); ``--smoke`` shrinks the grids so CI can afford it
+(ci.sh runs ``--artifact BENCH_pr2.json --program-artifact BENCH_pr3.json
+--smoke --artifact-only`` — the artifact refresh, not the full CSV sweep).
 """
 from __future__ import annotations
 
@@ -79,6 +81,75 @@ def artifact_cases(smoke: bool) -> dict:
     return cases
 
 
+def program_artifact_cases(smoke: bool) -> dict:
+    """Program pipelines: fused multi-op DAG (ideal + routed on the 16x16
+    mesh) vs the same ops run as separate store-to-memory sweeps."""
+    import numpy as np
+
+    from repro.core import CGRA
+    from repro.fabric import FabricTopology, place, route
+    from repro.program import (StencilProgram, hdiff_program, lower,
+                               simulate_program, two_stage_heat)
+
+    if smoke:
+        progs = [("heat2_pipeline", two_stage_heat(24, 32), 4),
+                 ("hdiff", hdiff_program(24, 32), 4)]
+    else:
+        progs = [("heat2_pipeline", two_stage_heat(48, 64), 8),
+                 ("hdiff", hdiff_program(48, 64), 8)]
+
+    rng = np.random.default_rng(0)
+    topo = FabricTopology.mesh(16, 16)
+    cases = {}
+    for name, prog, w in progs:
+        inputs = {f: rng.normal(size=prog.grid_shape)
+                  for f in prog.in_fields}
+        ideal, _ = simulate_program(lower(prog, workers=w), inputs, CGRA)
+        plan = lower(prog, workers=w)
+        rf = route(place(plan, topo, seed=0))
+        t0 = time.perf_counter()
+        routed, _ = simulate_program(plan, inputs, CGRA, fabric=rf)
+        wall_s = time.perf_counter() - t0
+        assert np.array_equal(ideal.output, routed.output)
+        # separate sweeps: every op as its own single-op program (each one a
+        # full read-from/store-to-memory pass), ideal + routed cycles summed
+        sep_ideal = sep_routed = 0
+        for op in prog.schedule():
+            solo = StencilProgram(f"solo_{op.name}", [op],
+                                  grid_shape=prog.grid_shape,
+                                  dtype=prog.dtype)
+            ins = {f: rng.normal(size=prog.grid_shape)
+                   for f in solo.in_fields}
+            pl = lower(solo, workers=w)
+            sep_ideal += simulate_program(pl, ins, CGRA)[0].cycles
+            pl = lower(solo, workers=w)
+            rfo = route(place(pl, topo, seed=0))
+            sep_routed += simulate_program(pl, ins, CGRA,
+                                           fabric=rfo)[0].cycles
+        assert ideal.cycles < sep_ideal and routed.cycles < sep_routed
+        s = rf.stats()
+        cases[name] = {
+            "grid": list(prog.grid_shape), "workers": w,
+            "ops": [op.name for op in prog.schedule()],
+            "pe_instructions": len(plan.dfg.nodes),
+            "cycles_fused_ideal": ideal.cycles,
+            "cycles_fused_routed": routed.cycles,
+            "cycles_separate_ideal": sep_ideal,
+            "cycles_separate_routed": sep_routed,
+            "fusion_speedup_ideal": round(sep_ideal / ideal.cycles, 4),
+            "fusion_speedup_routed": round(sep_routed / routed.cycles, 4),
+            "gflops_fused_ideal": round(ideal.gflops, 3),
+            "gflops_fused_routed": round(routed.gflops, 3),
+            "hops_mean": s["hops_mean"], "hops_max": s["hops_max"],
+            "max_channel_load": s["max_channel_load"],
+            "pe_utilization": s["pe_utilization"],
+            "token_hops": routed.fabric["token_hops"],
+            "stall_cycles": routed.fabric["stall_cycles"],
+            "sim_wall_s": round(wall_s, 3),
+        }
+    return cases
+
+
 def write_artifact(path: str, smoke: bool) -> None:
     art = {
         "schema": "bench_pr2/v1",
@@ -92,17 +163,32 @@ def write_artifact(path: str, smoke: bool) -> None:
     print(f"wrote {path}", file=sys.stderr)
 
 
+def write_program_artifact(path: str, smoke: bool) -> None:
+    art = {
+        "schema": "bench_pr3/v1",
+        "config": "smoke" if smoke else "full",
+        "fabric": "mesh16x16",
+        "cases": program_artifact_cases(smoke),
+    }
+    with open(path, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", file=sys.stderr)
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--artifact", metavar="PATH",
                     help="write the JSON perf snapshot to PATH")
+    ap.add_argument("--program-artifact", metavar="PATH",
+                    help="write the program-pipeline snapshot to PATH")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grids (fast CI configuration)")
     ap.add_argument("--artifact-only", action="store_true",
                     help="skip the CSV benchmark modules (needs --artifact)")
     args = ap.parse_args(argv)
-    if args.artifact_only and not args.artifact:
-        ap.error("--artifact-only requires --artifact PATH")
+    if args.artifact_only and not (args.artifact or args.program_artifact):
+        ap.error("--artifact-only requires --artifact/--program-artifact")
 
     failed = 0
     if not args.artifact_only:
@@ -125,6 +211,12 @@ def main(argv: list[str] | None = None) -> None:
     if args.artifact:
         try:
             write_artifact(args.artifact, args.smoke)
+        except Exception:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+    if args.program_artifact:
+        try:
+            write_program_artifact(args.program_artifact, args.smoke)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)

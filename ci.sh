@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify gate (see ROADMAP.md) — one command for CI and local use.
-# Runs the test suite, then refreshes the perf-trajectory artifact
-# (BENCH_pr2.json) in the fast smoke configuration.
+# Runs the test suite, then refreshes the perf-trajectory artifacts
+# (BENCH_pr2.json single-op mappings, BENCH_pr3.json program pipelines)
+# in the fast smoke configuration.
 set -euo pipefail
 cd "$(dirname "$0")"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --artifact BENCH_pr2.json --smoke --artifact-only
+    python -m benchmarks.run --artifact BENCH_pr2.json \
+    --program-artifact BENCH_pr3.json --smoke --artifact-only

@@ -14,6 +14,8 @@ Node op vocabulary (matches the paper's Fig. 7 legend):
   ``addr``                address/index generator (control unit)
   ``sync``                store counter -> done trigger
   ``mux``/``demux``/``copy``/``cmp``  pass-through utility ops
+  ``imux``                pattern-driven interleaving mux (program-graph
+                          re-interleave buffers, ``repro.program.lower``)
 """
 from __future__ import annotations
 
@@ -26,7 +28,8 @@ FLOPS_PER_OP = {"mul": 1, "mac": 2, "add": 1}
 
 # dot colours follow the paper's Fig. 7 legend.
 _DOT_COLORS = {
-    "mux": "lightyellow", "mul": "orange", "mac": "red", "demux": "lightblue",
+    "mux": "lightyellow", "imux": "lightyellow", "mul": "orange", "mac": "red",
+    "demux": "lightblue",
     "add": "green", "addr": "cyan", "load": "palegreen", "store": "plum",
     "filter": "gray80", "sync": "gold", "copy": "gray90", "cmp": "gray90",
 }

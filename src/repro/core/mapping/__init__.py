@@ -21,16 +21,18 @@ per axis — see :mod:`~repro.core.mapping.stages` — and ``plan_blocks``
 does not divide by ``w``.
 """
 from repro.core.mapping.blocks import BlockPlan, plan_blocks
-from repro.core.mapping.nd import map_1d, map_2d, map_3d, map_nd
+from repro.core.mapping.nd import (apply_min_capacities, map_1d, map_2d,
+                                   map_3d, map_nd)
 from repro.core.mapping.plan import MappingPlan
 from repro.core.mapping.stages import (AddTree, ReaderBank, SyncTree,
                                        TapChain, WorkerStream, WriterBank,
-                                       layer_stream, reader_stream,
-                                       row_tokens, source_worker, tap_bands)
+                                       compute_layer, layer_stream,
+                                       owning_stream, reader_stream,
+                                       row_tokens)
 from repro.core.mapping.streams import KeepMask, StreamSpec, band_keep
 
-__all__ = ["BlockPlan", "plan_blocks", "map_1d", "map_2d", "map_3d",
-           "map_nd", "MappingPlan", "AddTree", "ReaderBank", "SyncTree",
-           "TapChain", "WorkerStream", "WriterBank", "layer_stream",
-           "reader_stream", "row_tokens", "source_worker", "tap_bands",
-           "KeepMask", "StreamSpec", "band_keep"]
+__all__ = ["BlockPlan", "plan_blocks", "apply_min_capacities", "map_1d",
+           "map_2d", "map_3d", "map_nd", "MappingPlan", "AddTree",
+           "ReaderBank", "SyncTree", "TapChain", "WorkerStream", "WriterBank",
+           "compute_layer", "layer_stream", "owning_stream", "reader_stream",
+           "row_tokens", "KeepMask", "StreamSpec", "band_keep"]

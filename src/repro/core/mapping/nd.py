@@ -29,8 +29,8 @@ from __future__ import annotations
 
 from repro.core.dfg import DFG
 from repro.core.mapping.plan import MappingPlan
-from repro.core.mapping.stages import (AddTree, ReaderBank, SyncTree,
-                                       TapChain, WorkerStream, WriterBank,
+from repro.core.mapping.stages import (ReaderBank, SyncTree, WorkerStream,
+                                       WriterBank, compute_layer,
                                        layer_stream, row_tokens)
 from repro.core.spec import StencilSpec
 
@@ -46,15 +46,22 @@ def map_nd(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
     if w < 1:
         raise ValueError("need at least one worker")
     if d >= 2 and shape[-1] % w:
+        fit = max(k for k in range(1, min(w, shape[-1]) + 1)
+                  if shape[-1] % k == 0)
         raise ValueError(
-            f"rank-{d} mapping needs inner extent % workers == 0 (column "
-            f"ownership); got {shape[-1]} % {w}. Strip-mine with "
-            "plan_blocks() first.")
-    if w > shape[-1] - 2 * radii[-1] * T:
+            f"rank-{d} spec (grid_shape={shape}) needs inner extent % workers"
+            f" == 0 (column ownership); got {shape[-1]} % {w} == "
+            f"{shape[-1] % w}. Strip-mine with plan_blocks() first, or use "
+            f"workers={fit} — the largest count <= {w} that divides "
+            f"{shape[-1]}.")
+    interior_inner = shape[-1] - 2 * radii[-1] * T
+    if w > interior_inner:
         raise ValueError(
-            f"{w} workers but only {shape[-1] - 2 * radii[-1] * T} interior "
-            f"sites along the innermost axis; some workers would own no "
-            "outputs (their sync would never trigger)")
+            f"rank-{d} spec (grid_shape={shape}, radii={radii}, "
+            f"timesteps={T}): {w} workers but only {interior_inner} interior "
+            f"sites along the innermost axis, so some workers would own no "
+            f"outputs (their sync would never trigger). Use workers <= "
+            f"{interior_inner}.")
 
     g = DFG(f"stencil{d}d_{'x'.join(map(str, shape))}"
             f"_r{'x'.join(map(str, radii))}_w{w}_t{T}")
@@ -67,27 +74,11 @@ def map_nd(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
     out_streams = []
     for layer in range(1, T + 1):
         out_streams = [layer_stream(spec, layer, c, w) for c in range(w)]
-        tails = []
-        for c in range(w):
-            rt = row_tokens(out_streams[c].counts)
-            gate = max(r * rt[b] for b, r in enumerate(radii))
-            chains = [TapChain(g, spec, layer=layer, worker=c, axis=d - 1,
-                               sources=sources, workers=w,
-                               queue_capacity=queue_capacity,
-                               min_caps=min_caps, rt=rt, gate=gate,
-                               center_extra=center_extra)]
-            for axis in range(d - 2, -1, -1):
-                if radii[axis] == 0:
-                    continue
-                chains.append(TapChain(g, spec, layer=layer, worker=c,
-                                       axis=axis, sources=sources, workers=w,
-                                       queue_capacity=queue_capacity,
-                                       min_caps=min_caps, rt=rt, gate=gate))
-            tree = AddTree(g, chains, layer=layer, worker=c,
-                           queue_capacity=queue_capacity, min_caps=min_caps,
-                           rt=rt, gate=gate)
-            tails.append(tree.tail)
-        sources = [WorkerStream(t, s) for t, s in zip(tails, out_streams)]
+        sources = compute_layer(
+            g, radii=radii, coeffs=spec.coeffs, out_streams=out_streams,
+            sources=sources, tag=f"l{layer}", queue_capacity=queue_capacity,
+            min_caps=min_caps, center_extra=center_extra,
+            params={"layer": layer})
 
     out_idx = [s.flat_indices(shape) for s in out_streams]
     writers = WriterBank(g, [ws.node for ws in sources], out_idx,
@@ -95,7 +86,7 @@ def map_nd(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
     SyncTree(g, writers.stores, [len(o) for o in out_idx], queue_capacity)
 
     if auto_capacity:
-        _apply_min_caps(g, min_caps)
+        apply_min_capacities(g, min_caps)
     chains_note = " + ".join(
         f"ax{b}:{2 * r + (1 if b == d - 1 else 0)}"
         for b, r in enumerate(radii) if r or b == d - 1)
@@ -110,7 +101,10 @@ def map_nd(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
                + (f"; mandatory buffering ~= {buf} elements" if d > 1 else "")))
 
 
-def _apply_min_caps(g: DFG, min_caps: dict[int, int]) -> None:
+def apply_min_capacities(g: DFG, min_caps: dict[int, int]) -> None:
+    """Set every queue to its analytic minimum (default 4 when no bound was
+    derived) — the ``auto_capacity=True`` policy, shared with program-graph
+    lowering (:mod:`repro.program.lower`)."""
     for e in g.edges():
         if id(e) in min_caps:
             e.capacity = min_caps[id(e)]

@@ -9,6 +9,10 @@ credit carried across cycles).
 
 The simulator *executes the numerics*: it produces the output grid, so every
 mapping is validated end-to-end against ``core.reference`` — not just timed.
+Program-graph plans (``repro.program``) are simulated by the same loop: they
+carry several ``cmp`` completion nodes (one per output field — the run ends
+when *all* have fired), ``imux`` re-interleave nodes, and an ``out_shape``
+that packs one grid-sized slot per output field.
 
 Synchronous two-phase semantics: firing decisions for cycle t use queue state
 at the start of t (push+pop on the same queue in one cycle is allowed, as in
@@ -156,20 +160,23 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     spec = plan.spec
     g = plan.dfg
     flat_in = np.asarray(x, dtype=np.float64).reshape(-1)
-    flat_out = np.zeros(int(np.prod(spec.grid_shape)), dtype=np.float64)
+    # program plans (repro.program) pack several output fields into one image
+    out_shape = tuple(getattr(plan, "out_shape", None) or spec.grid_shape)
+    flat_out = np.zeros(int(np.prod(out_shape)), dtype=np.float64)
 
     # per-node runtime state ---------------------------------------------------
     state: dict[int, dict] = {}
-    done_node: Node | None = None
+    done_pending = 0
     for nd in g.nodes:
         st: dict = {"k": 0}
         if nd.op == "sync":
             st["count"] = 0
             st["emitted"] = False
+        elif nd.op == "cmp":
+            st["fired"] = False
+            done_pending += 1
         state[nd.nid] = st
-        if nd.name == "done":
-            done_node = nd
-    assert done_node is not None
+    assert done_pending, "graph has no completion (cmp) node"
 
     net = _Network(fabric, g) if fabric is not None else None
 
@@ -195,7 +202,10 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     # Eligibility snapshots are flat lists indexed by nid (nids are dense).
     rec = {nd.nid: (nd, nd.nid, nd.op, state[nd.nid], nd.in_edges,
                     nd.out_edges) for nd in nodes}
-    snap_recs = [rec[nd.nid] for nd in nodes]
+    # imux pops exactly one (pattern-selected) port per firing; snapshotting
+    # all-ports-nonempty would both stall it and deadlock re-interleaves.
+    snap_recs = [rec[nd.nid] for nd in nodes if nd.op != "imux"]
+    imux_recs = [rec[nd.nid] for nd in nodes if nd.op == "imux"]
     mem_recs = [rec[nd.nid] for nd in mem_nodes]
     other_recs = [rec[nd.nid] for nd in other_nodes]
     n_ids = 1 + max(nd.nid for nd in nodes)
@@ -217,6 +227,11 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
             for _, nid, _, _, ine, oute in snap_recs:
                 in_avail[nid] = all(e.q for e in ine)
                 out_free[nid] = all(not net.edge_full(e) for e in oute)
+        for nd_, nid, _, stx, ine, oute in imux_recs:
+            pat = nd_.params["pattern"]
+            in_avail[nid] = bool(ine[pat[stx["k"] % len(pat)]].q)
+            out_free[nid] = (all(not e.full() for e in oute) if net is None
+                             else all(not net.edge_full(e) for e in oute))
         any_fired = False
         # phase 2: execute. Memory nodes first in rotated order (fair
         # bandwidth arbitration), then the rest.
@@ -285,12 +300,21 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
                     v = 1
                 else:
                     continue
-            elif op == "cmp":  # the final done-combiner
-                if not in_avail[nid]:
+            elif op == "imux":  # re-interleave: pop the pattern-selected port
+                if not (in_avail[nid] and out_free[nid]):
+                    continue
+                pat = nd.params["pattern"]
+                v = in_edges[pat[st["k"] % len(pat)]].q.popleft()
+                st["k"] += 1
+            elif op == "cmp":  # a done-combiner (programs may carry several)
+                if st["fired"] or not in_avail[nid]:
                     continue
                 for e in in_edges:
                     e.q.popleft()
-                finished = True
+                st["fired"] = True
+                done_pending -= 1
+                if done_pending == 0:
+                    finished = True
                 fires[op] = fires.get(op, 0) + 1
                 any_fired = True
                 continue
@@ -325,7 +349,7 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
                         "stall_cycles": net.stall_cycles}
     return SimResult(
         cycles=cycles, flops=flops, loads=loads, stores=stores, fires=fires,
-        output=flat_out.reshape(spec.grid_shape), gflops=gflops,
+        output=flat_out.reshape(out_shape), gflops=gflops,
         pct_of_roofline=gflops / roof.achievable_gflops,
         pct_of_compute_peak=gflops / machine.peak_gflops,
         max_queue_total=max_q, mac_pes=plan.mac_pes, fabric=fabric_stats)

@@ -120,21 +120,14 @@ class StencilSpec:
     def arithmetic_intensity(self) -> float:
         """Flops/byte exactly as §VI computes it: interior flops over one full
         read + one full write of the grid (single sweep)."""
-        b = 8 if self.dtype == "float64" else self.bytes_per_elem
-        flops = self.flops_per_output * math.prod(self.interior_shape)
-        bytes_moved = 2 * math.prod(self.grid_shape) * b
-        return flops / bytes_moved
+        bytes_moved = 2 * math.prod(self.grid_shape) * self.bytes_per_elem
+        return self.total_flops(1) / bytes_moved
 
     def arithmetic_intensity_fused(self) -> float:
         """AI of the ``timesteps``-fused sweep (§IV beyond-paper): T sweeps of
-        flops for one read + one write."""
-        b = 8 if self.dtype == "float64" else self.bytes_per_elem
-        flops = sum(
-            self.flops_per_output * math.prod(
-                tuple(n - 2 * r * (k + 1) for n, r in zip(self.grid_shape, self.radii)))
-            for k in range(self.timesteps))
-        bytes_moved = 2 * math.prod(self.grid_shape) * b
-        return flops / bytes_moved
+        flops (:meth:`total_flops`) for one read + one write."""
+        bytes_moved = 2 * math.prod(self.grid_shape) * self.bytes_per_elem
+        return self.total_flops() / bytes_moved
 
 
 # --- the paper's two benchmark stencils (§VI) --------------------------------

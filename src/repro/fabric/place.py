@@ -52,6 +52,9 @@ def _node_tokens(n: Node, memo: dict[int, int]) -> int:
         t = 1
     elif op == "cmp":
         t = 0
+    elif op == "imux":  # re-interleave: forwards every popped input token
+        t = (sum(_node_tokens(e.src, memo) for e in n.in_edges)
+             if n.in_edges else 1)
     else:  # mul/mac/add/mux/demux/copy: fire once per complete input set
         t = (min(_node_tokens(e.src, memo) for e in n.in_edges)
              if n.in_edges else 1)
@@ -95,13 +98,17 @@ def _stage_rank(n: Node) -> int:
 
 
 def _seed_key(n: Node) -> tuple:
-    """Greedy-seed order: worker pipeline by worker pipeline, and *within* a
-    compute worker one axis tap-chain at a time (rank-3 workers carry three
-    chains plus an ADD tree; interleaving them would scatter each MUL→MAC
-    string across the fabric before annealing starts).  Temporal layers are
-    kept together the same way."""
-    return (n.worker, _stage_rank(n), n.params.get("layer", 0),
-            -n.params.get("axis", -1), n.nid)
+    """Greedy-seed order: subgraph by subgraph (program graphs tag each
+    operator's nodes with ``subgraph=<topo index>`` so every op's chains stay
+    physically contiguous instead of interleaving by worker id), then worker
+    pipeline by worker pipeline, and *within* a compute worker one axis
+    tap-chain at a time (rank-3 workers carry three chains plus an ADD tree;
+    interleaving them would scatter each MUL→MAC string across the fabric
+    before annealing starts).  Temporal layers are kept together the same
+    way.  Single-op plans carry no ``subgraph`` tag — their order is
+    unchanged."""
+    return (n.params.get("subgraph", 0), n.worker, _stage_rank(n),
+            n.params.get("layer", 0), -n.params.get("axis", -1), n.nid)
 
 
 def _snake(topo: FabricTopology) -> list[Coord]:

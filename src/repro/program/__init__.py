@@ -1,0 +1,20 @@
+"""Stencil program graphs: compose multi-operator DAGs into one fused
+spatial pipeline (docs/program.md).
+
+    prog = hdiff_program(48, 64)                     # IR: fields + op DAG
+    plan = lower(prog, workers=4, auto_capacity=True)  # ONE combined DFG
+    rf   = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    res, fields = simulate_program(plan, {"inp": x}, CGRA, fabric=rf)
+    # fields bit-match program_reference_np(prog, {"inp": x})
+"""
+from repro.program.ir import CombineOp, StencilOp, StencilProgram
+from repro.program.library import (hdiff_program, laplacian_2d,
+                                   two_stage_heat)
+from repro.program.lower import (ProgramPlan, field_leads, lower,
+                                 simulate_program)
+from repro.program.oracle import program_reference, program_reference_np
+
+__all__ = ["CombineOp", "StencilOp", "StencilProgram", "hdiff_program",
+           "laplacian_2d", "two_stage_heat", "ProgramPlan", "field_leads",
+           "lower", "simulate_program", "program_reference",
+           "program_reference_np"]

@@ -117,6 +117,29 @@ def test_map_nd_rejects_outputless_workers():
         map_nd(heat_2d(12, 16, dtype="float64"), workers=16)
 
 
+def test_unowned_columns_error_names_spec_and_suggests_workers():
+    """The divisibility error names the offending spec and proposes the
+    largest worker count that does divide the inner extent."""
+    with pytest.raises(ValueError) as ei:
+        map_nd(heat_2d(12, 24, dtype="float64"), workers=5)
+    msg = str(ei.value)
+    assert "rank-2 spec (grid_shape=(12, 24))" in msg
+    assert "24 % 5 == 4" in msg
+    assert "workers=4" in msg            # largest divisor of 24 that is <= 5
+    assert "plan_blocks" in msg
+
+
+def test_outputless_workers_error_names_spec_and_bound():
+    """The too-many-workers error names the spec and states the usable
+    maximum (interior sites along the innermost axis)."""
+    with pytest.raises(ValueError) as ei:
+        map_nd(heat_2d(12, 16, dtype="float64"), workers=16)
+    msg = str(ei.value)
+    assert "grid_shape=(12, 16)" in msg and "radii=(1, 1)" in msg
+    assert "only 14 interior sites" in msg
+    assert "workers <= 14" in msg
+
+
 # ---------------------------------------------------------------------------
 # temporal layers at rank >= 2 (new: pre-refactor map_2d ignored timesteps)
 # ---------------------------------------------------------------------------
@@ -197,3 +220,21 @@ def test_bytes_per_elem_lookup():
     assert StencilSpec((8,), (1,), ((1, 1, 1),), dtype="float32").bytes_per_elem == 4
     assert StencilSpec((8,), (1,), ((1, 1, 1),), dtype="float64").bytes_per_elem == 8
     assert StencilSpec((8,), (1,), ((1, 1, 1),), dtype="bfloat16").bytes_per_elem == 2
+
+
+def test_arithmetic_intensity_delegates_to_total_flops():
+    """AI == total_flops / (one read + one write), pinned for the paper's
+    benchmark stencils (§VI: 1D ~2.06, 2D ~5.59 flops/byte)."""
+    from repro.core.spec import paper_stencil_1d, paper_stencil_2d
+    s1 = paper_stencil_1d()                      # 194400, rx=8, f64
+    assert s1.arithmetic_intensity() == s1.total_flops(1) / (2 * 194400 * 8)
+    assert round(s1.arithmetic_intensity(), 2) == 2.06
+    s2 = paper_stencil_2d()                      # 449x960, r=12, f64
+    assert s2.arithmetic_intensity() == \
+        s2.total_flops(1) / (2 * 449 * 960 * 8)
+    assert round(s2.arithmetic_intensity(), 2) == 5.59
+    # fused AI: same delegation, float32 path uses bytes_per_elem (4)
+    s3 = StencilSpec((40,), (2,), ((0.2,) * 5,), dtype="float32",
+                     timesteps=2)
+    assert s3.arithmetic_intensity_fused() == \
+        s3.total_flops() / (2 * 40 * 4)

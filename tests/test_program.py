@@ -1,0 +1,261 @@
+"""Stencil program graphs: DAG validation, margin inference, splice
+lowering (bit-exact vs the composed oracle), re-interleave fallback,
+skew buffering, multi-output sync, 16x16 place-and-route, and the
+fused-beats-separate-sweeps pipeline claim."""
+import numpy as np
+import pytest
+
+from repro.core import CGRA, SimDeadlock, simulate
+from repro.core.spec import StencilSpec, heat_2d
+from repro.fabric import FabricTopology, place, route
+from repro.program import (CombineOp, StencilOp, StencilProgram, field_leads,
+                           hdiff_program, lower, program_reference,
+                           program_reference_np, simulate_program,
+                           two_stage_heat)
+
+
+def _sim(prog, workers, x, **kw):
+    plan = lower(prog, workers, **{k: v for k, v in kw.items()
+                                   if k in ("queue_capacity",
+                                            "auto_capacity")})
+    skw = {k: v for k, v in kw.items()
+           if k not in ("queue_capacity", "auto_capacity")}
+    res, fields = simulate_program(plan, {prog.in_fields[0]: x}, CGRA, **skw)
+    return plan, res, fields
+
+
+# ---------------------------------------------------------------------------
+# IR: validation, scheduling, margin inference
+# ---------------------------------------------------------------------------
+def test_ir_cycle_detection():
+    spec = heat_2d(16, 24, dtype="float64")
+    with pytest.raises(ValueError, match="cycle"):
+        StencilProgram("cyc", [StencilOp("a", spec, "u", "v"),
+                               StencilOp("b", spec, "v", "u")])
+
+
+def test_ir_single_assignment():
+    spec = heat_2d(16, 24, dtype="float64")
+    with pytest.raises(ValueError, match="single-assignment"):
+        StencilProgram("dup", [StencilOp("a", spec, "u", "v"),
+                               StencilOp("b", spec, "u", "v")])
+
+
+def test_ir_empty_valid_box():
+    spec = heat_2d(8, 12, dtype="float64")
+    with pytest.raises(ValueError, match="empty valid box"):
+        StencilProgram("deep", [StencilOp(f"o{i}", spec, f"f{i}", f"f{i+1}")
+                                for i in range(4)])
+
+
+def test_ir_margins_and_outputs():
+    prog = hdiff_program(20, 24)
+    m = prog.margins()
+    assert m["inp"] == (0, 0)
+    assert m["lap"] == (1, 1)
+    assert m["flx"] == (2, 2)
+    assert m["out"] == (2, 2)        # combine: max of (0,0) and (2,2)
+    assert prog.in_fields == ("inp",)
+    assert prog.out_fields == ("out",)      # the only unconsumed field
+    assert prog.field_interior("out") == (16, 20)
+    names = [op.name for op in prog.schedule()]
+    assert names.index("lap") < names.index("flx") < names.index("out")
+    # the deep branch accumulates site-lead; the external input has none
+    leads = field_leads(prog)
+    assert leads["inp"] == 0 and leads["flx"] > leads["lap"] > 0
+
+
+def test_ir_combine_only_needs_grid():
+    with pytest.raises(ValueError, match="grid_shape"):
+        StencilProgram("c", [CombineOp("add", ("a", "b"), (1.0, 1.0), "c")])
+    prog = StencilProgram("c", [CombineOp("add", ("a", "b"), (1.0, 1.0),
+                                          "c")],
+                          grid_shape=(12, 16), dtype="float64")
+    assert prog.grid_shape == (12, 16)
+
+
+# ---------------------------------------------------------------------------
+# lowering: bit-exact pipelines vs the composed oracle
+# ---------------------------------------------------------------------------
+def test_two_stage_heat_exact(rng):
+    prog = two_stage_heat(18, 24)
+    x = rng.normal(size=(18, 24))
+    plan, res, fields = _sim(prog, 3, x)
+    ref = program_reference_np(prog, {"u": x})
+    np.testing.assert_allclose(fields["u2"], ref["u2"], atol=1e-9)
+    # fused: the grid is read exactly once, no intermediate store/reload
+    assert res.loads == 18 * 24
+    assert res.stores == int(np.prod(prog.field_interior("u2")))
+    assert plan.pe_counts["cmp"] == 1
+
+
+def test_branching_combine_exact(rng):
+    """laplacian + flux -> output: the hdiff fan-out/join, with the analytic
+    skew buffers (auto_capacity) and with unbounded queues."""
+    prog = hdiff_program(20, 24)
+    x = rng.normal(size=(20, 24))
+    ref = program_reference_np(prog, {"inp": x})
+    for auto in (False, True):
+        plan, res, fields = _sim(prog, 4, x, auto_capacity=auto,
+                                 max_cycles=2_000_000)
+        np.testing.assert_allclose(fields["out"], ref["out"], atol=1e-9)
+        assert res.loads == 20 * 24          # fan-out still loads once
+
+
+def test_skew_starved_combine_deadlocks(rng):
+    """Below the computed inter-operator skew buffer the shared producer
+    deadlocks behind the deep branch — the buffers are *mandatory*."""
+    prog = hdiff_program(20, 24)
+    x = rng.normal(size=(20, 24))
+    plan = lower(prog, workers=4, queue_capacity=2)
+    with pytest.raises(SimDeadlock):
+        simulate(plan, plan.pack_inputs({"inp": x}), CGRA,
+                 max_cycles=200_000)
+
+
+def test_remux_worker_mismatch_exact(rng):
+    """Producer workers != consumer workers: explicit re-interleave buffers
+    (imux + strided filters), both directions, still bit-exact."""
+    spec = heat_2d(16, 24, dtype="float64")
+    prog = StencilProgram("mm", [StencilOp("a", spec, "u", "v"),
+                                 StencilOp("b", spec, "v", "w")])
+    x = rng.normal(size=(16, 24))
+    ref = program_reference_np(prog, {"u": x})
+    for wa, wb in ((2, 3), (4, 2)):
+        plan = lower(prog, workers={"a": wa, "b": wb}, auto_capacity=True)
+        assert plan.pe_counts.get("imux", 0) == wb
+        res, fields = simulate_program(plan, {"u": x}, CGRA,
+                                       max_cycles=2_000_000)
+        np.testing.assert_allclose(fields["w"], ref["w"], atol=1e-9)
+
+
+def test_multi_output_multi_sync(rng):
+    """Two output fields: one WriterBank + SyncTree (cmp) each; the sim runs
+    until *all* completions fire and unpacks both fields."""
+    spec = StencilSpec((60,), (2,), ((.1, .2, .4, .2, .1),), dtype="float64")
+    prog = StencilProgram("mo", [StencilOp("a", spec, "u", "v"),
+                                 StencilOp("b", spec, "v", "w")],
+                          outputs=["v", "w"])
+    plan = lower(prog, workers=2, auto_capacity=True)
+    assert plan.pe_counts["cmp"] == 2
+    assert plan.out_shape == (2, 60)
+    x = rng.normal(size=60)
+    res, fields = simulate_program(plan, {"u": x}, CGRA)
+    ref = program_reference_np(prog, {"u": x})
+    np.testing.assert_allclose(fields["v"], ref["v"], atol=1e-9)
+    np.testing.assert_allclose(fields["w"], ref["w"], atol=1e-9)
+
+
+def test_jnp_oracle_matches_np(rng):
+    prog = hdiff_program(16, 24, dtype="float32")
+    x = rng.normal(size=(16, 24)).astype(np.float32)
+    ref_np = program_reference_np(prog, {"inp": x})
+    ref_j = program_reference(prog, {"inp": x})
+    np.testing.assert_allclose(np.asarray(ref_j["out"]), ref_np["out"],
+                               atol=1e-4)
+
+
+def test_timestepped_op_in_program(rng):
+    """A StencilOp may itself fuse timesteps; margins scale with t*r."""
+    import dataclasses
+    spec = dataclasses.replace(heat_2d(20, 24, dtype="float64"), timesteps=2)
+    prog = StencilProgram("t2", [StencilOp("a", spec, "u", "v")])
+    assert prog.margins()["v"] == (2, 2)
+    x = rng.normal(size=(20, 24))
+    plan, res, fields = _sim(prog, 4, x, auto_capacity=True)
+    ref = program_reference_np(prog, {"u": x})
+    np.testing.assert_allclose(fields["v"], ref["v"], atol=1e-9)
+
+
+def _random_dag(seed: int):
+    """A random 2-to-4-op rank-1/2 DAG (chains, fan-out, combines) — the
+    same shape as the hypothesis strategy in test_property.py, but seeded
+    stdlib randomness so it always runs (hypothesis is an optional dep)."""
+    import random
+
+    rnd = random.Random(seed)
+    d = rnd.randint(1, 2)
+    w = rnd.randint(1, 3)
+    shape = (rnd.randint(11, 14), 24)[-d:]
+    ops, fields, margin = [], ["f0"], {"f0": 0}
+    for i in range(rnd.randint(2, 4)):
+        src = rnd.choice(fields[-2:])
+        out = f"f{i + 1}"
+        if rnd.random() < 1 / 3 and len(fields) >= 2:
+            other = rnd.choice(fields)
+            ops.append(CombineOp(f"op{i}", (src, other),
+                                 (rnd.uniform(-1, 1), rnd.uniform(-1, 1)),
+                                 out))
+            margin[out] = max(margin[src], margin[other])
+        else:
+            budget = 4 - margin[src]
+            if budget < 1:
+                break
+            radii = tuple(rnd.randint(0 if d > 1 else 1, min(2, budget))
+                          for _ in range(d))
+            if not any(radii):
+                radii = (1,) * d
+            coeffs = tuple(tuple(rnd.uniform(-1, 1)
+                                 for _ in range(2 * r + 1)) for r in radii)
+            ops.append(StencilOp(f"op{i}", StencilSpec(
+                shape, radii, coeffs, dtype="float64"), src, out))
+            margin[out] = margin[src] + max(radii)
+        fields.append(out)
+    return StencilProgram("fuzz", ops, grid_shape=shape,
+                          dtype="float64"), w
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_dag_exact_and_auto_capacity_liveness(seed):
+    """Seeded random DAGs: fused outputs equal the composed oracle and the
+    analytic capacities (per-op mandatory buffering + inter-operator skew)
+    never deadlock; external inputs are loaded exactly once."""
+    prog, w = _random_dag(seed)
+    rng = np.random.default_rng(seed)
+    inputs = {f: rng.normal(size=prog.grid_shape) for f in prog.in_fields}
+    plan = lower(prog, workers=w, auto_capacity=True)
+    res, fields = simulate_program(plan, inputs, CGRA,
+                                   max_cycles=2_000_000)  # deadlock -> raise
+    ref = program_reference_np(prog, inputs)
+    for f in prog.out_fields:
+        np.testing.assert_allclose(fields[f], ref[f], atol=1e-9)
+    assert res.loads == len(prog.in_fields) * int(np.prod(prog.grid_shape))
+
+
+# ---------------------------------------------------------------------------
+# physical fabric integration
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mk", [lambda: two_stage_heat(24, 32),
+                                lambda: hdiff_program(24, 32)])
+def test_program_places_and_routes_16x16(mk):
+    prog = mk()
+    plan = lower(prog, workers=4)
+    rf = route(place(plan, FabricTopology.mesh(16, 16), seed=0))  # strict
+    s = rf.stats()
+    assert s["max_channel_load"] <= s["channel_capacity"]
+    assert 0 < s["pe_utilization"] <= 1
+
+
+def test_program_routed_sim_bit_identical_and_fused_wins(rng):
+    """The acceptance claim: one fused pipeline, routed on the 16x16 mesh,
+    is bit-identical to ideal mode and strictly faster than running its ops
+    as separate store-to-memory sweeps."""
+    prog = two_stage_heat(24, 32)
+    x = rng.normal(size=(24, 32))
+    ideal, _ = simulate_program(lower(prog, workers=4), {"u": x}, CGRA)
+    plan = lower(prog, workers=4)
+    rf = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    routed, fields = simulate_program(plan, {"u": x}, CGRA, fabric=rf)
+    assert np.array_equal(ideal.output, routed.output)
+    assert routed.cycles >= ideal.cycles
+    ref = program_reference_np(prog, {"u": x})
+    np.testing.assert_allclose(fields["u2"], ref["u2"], atol=1e-9)
+    # separate sweeps: each op as its own single-op program, cycles summed
+    separate = 0
+    for op in prog.schedule():
+        solo = StencilProgram(f"solo_{op.name}", [op],
+                              grid_shape=prog.grid_shape, dtype=prog.dtype)
+        pl = lower(solo, workers=4)
+        ins = {f: rng.normal(size=prog.grid_shape) for f in solo.in_fields}
+        separate += simulate_program(pl, ins, CGRA)[0].cycles
+    assert ideal.cycles < separate

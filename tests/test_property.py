@@ -132,6 +132,79 @@ def test_map_nd_exact_and_auto_capacity_liveness(sw, seed):
     assert sum(plan.sync_expect) == int(np.prod(spec.interior_shape_fused))
 
 
+@st.composite
+def program_dag(draw):
+    """Random 2-to-4-op rank-1/2 stencil-program DAGs: chains with fan-out
+    into stencil and combine consumers, margins kept inside the grid."""
+    from repro.program import CombineOp, StencilOp, StencilProgram
+
+    d = draw(st.integers(1, 2))
+    w = draw(st.integers(1, 3))
+    # inner extent divisible by any w in 1..3; room for total margin <= 4
+    shape = (draw(st.integers(11, 14)), 24)[-d:]
+    n_ops = draw(st.integers(2, 4))
+    ops, fields, margin = [], ["f0"], {"f0": 0}
+    for i in range(n_ops):
+        # bias toward recent fields so chains get deep enough to need skew
+        src = draw(st.sampled_from(fields[-2:]))
+        out = f"f{i + 1}"
+        kind = draw(st.sampled_from(["stencil", "stencil", "combine"]))
+        if kind == "combine" and len(fields) >= 2:
+            other = draw(st.sampled_from(fields))
+            c1, c2 = (draw(st.floats(-1, 1, allow_nan=False, width=32))
+                      for _ in range(2))
+            ops.append(CombineOp(f"op{i}", (src, other), (c1, c2), out))
+            margin[out] = max(margin[src], margin[other])
+        else:
+            budget = 4 - margin[src]
+            if budget < 1:
+                break
+            radii = tuple(draw(st.integers(0 if d > 1 else 1,
+                                           min(2, budget)))
+                          for _ in range(d))
+            if not any(radii):
+                radii = (1,) * d
+            coeffs = tuple(
+                tuple(draw(st.lists(
+                    st.floats(-1, 1, allow_nan=False, width=32),
+                    min_size=2 * r + 1, max_size=2 * r + 1)))
+                for r in radii)
+            spec = StencilSpec(shape, radii, coeffs, dtype="float64")
+            ops.append(StencilOp(f"op{i}", spec, src, out))
+            margin[out] = margin[src] + max(radii)
+        fields.append(out)
+    if not any(isinstance(op, StencilOp) for op in ops):
+        r1 = (1,) * d
+        spec = StencilSpec(shape, r1, ((0.5, -1.0, 0.5),) * d,
+                           dtype="float64")
+        ops.append(StencilOp("opx", spec, fields[-1], "fx"))
+    return StencilProgram("fuzz", ops, grid_shape=shape,
+                          dtype="float64"), w
+
+
+@given(program_dag(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_program_dag_exact_and_auto_capacity_liveness(pw, seed):
+    """Random stencil-program DAGs: the fused pipeline's outputs equal the
+    composed oracle and the analytic capacities (per-op mandatory buffering
+    + inter-operator skew) never deadlock."""
+    from repro.program import (lower, program_reference_np, simulate_program)
+
+    prog, w = pw
+    rng = np.random.default_rng(seed)
+    inputs = {f: rng.normal(size=prog.grid_shape)
+              for f in prog.in_fields}
+    plan = lower(prog, workers=w, auto_capacity=True)
+    res, fields = simulate_program(plan, inputs, CGRA,
+                                   max_cycles=2_000_000)  # deadlock -> raise
+    ref = program_reference_np(prog, inputs)
+    for f in prog.out_fields:
+        np.testing.assert_allclose(fields[f], ref[f], atol=1e-9)
+    # external inputs are loaded exactly once each, fan-out or not
+    assert res.loads == len(prog.in_fields) * int(
+        np.prod(prog.grid_shape))
+
+
 @given(st.integers(24, 200), st.integers(1, 4), st.integers(1, 6))
 @settings(**SET)
 def test_mapping_interleave_algebra(n, r, w):
