@@ -13,9 +13,18 @@ Prints ``name,us_per_call,derived`` CSV (assignment deliverable (d)).
 roofline %, fabric hop/stall stats for the 1D/2D/3D mappings) so the perf
 trajectory accumulates across PRs; ``--program-artifact PATH`` writes the
 program-pipeline snapshot (BENCH_pr3.json: fused multi-op DAGs vs separate
-store-to-memory sweeps); ``--smoke`` shrinks the grids so CI can afford it
-(ci.sh runs ``--artifact BENCH_pr2.json --program-artifact BENCH_pr3.json
---smoke --artifact-only`` — the artifact refresh, not the full CSV sweep).
+store-to-memory sweeps); ``--engine-artifact PATH`` writes the simulation-
+engine comparison snapshot (BENCH_pr4.json: interpreter vs compiled vector
+engine wall times + speedups, with a large vector-only case the interpreter
+could not afford); ``--smoke`` shrinks the grids so CI can afford it.
+
+``--engine {interp,vector,both}`` selects the simulation backend for the
+pr2/pr3 artifact cases — ``both`` times the two backends, asserts identical
+cycles/fires/outputs (CI's engine-drift gate) and records per-engine wall
+times.  ``--case NAME`` restricts every artifact to one named case.
+
+ci.sh runs ``--artifact BENCH_pr2.json --program-artifact BENCH_pr3.json
+--engine-artifact BENCH_pr4.json --engine both --smoke --artifact-only``.
 """
 from __future__ import annotations
 
@@ -30,13 +39,57 @@ if __package__ in (None, ""):      # script mode: `python benchmarks/run.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
-def artifact_cases(smoke: bool) -> dict:
+def _sim_pair(mk_plan, x, engine, topo):
+    """Time one engine on a fresh plan: ideal + routed (the two simulate()
+    calls only).  Returns ``(ideal, routed, routed_fabric, wall_ideal_s,
+    wall_routed_s, plan)`` — the plan is handed back so callers can report
+    its inventory without rebuilding it."""
+    import numpy as np
+
+    from repro.core import CGRA, simulate
+    from repro.fabric import place, route
+
+    plan_ideal = mk_plan()
+    plan_routed = mk_plan()
+    rf = route(place(plan_routed, topo, seed=0))
+    t0 = time.perf_counter()
+    ideal = simulate(plan_ideal, x, CGRA, engine=engine)
+    t1 = time.perf_counter()
+    routed = simulate(plan_routed, x, CGRA, fabric=rf, engine=engine)
+    wall_routed = time.perf_counter() - t1
+    wall_ideal = t1 - t0
+    assert np.array_equal(ideal.output, routed.output)
+    return ideal, routed, rf, wall_ideal, wall_routed, plan_ideal
+
+
+def _assert_engines_agree(name, interp_pair, vector_pair):
+    """CI gate: any drift between the backends fails the artifact refresh."""
+    for tag, a, b in (("ideal", interp_pair[0], vector_pair[0]),
+                      ("routed", interp_pair[1], vector_pair[1])):
+        if (a.cycles != b.cycles or a.fires != b.fires
+                or a.loads != b.loads or a.stores != b.stores
+                or a.flops != b.flops
+                or a.output.tobytes() != b.output.tobytes()):
+            raise AssertionError(
+                f"engine drift on {name}/{tag}: interp cycles={a.cycles} "
+                f"vector cycles={b.cycles} (fires/outputs must be identical)")
+    ra, rb = interp_pair[1], vector_pair[1]
+    if (ra.fabric["token_hops"] != rb.fabric["token_hops"]
+            or ra.fabric["stall_cycles"] != rb.fabric["stall_cycles"]):
+        raise AssertionError(
+            f"engine drift on {name}/network: "
+            f"hops {ra.fabric['token_hops']}/{rb.fabric['token_hops']} "
+            f"stalls {ra.fabric['stall_cycles']}/{rb.fabric['stall_cycles']}")
+
+
+def artifact_cases(smoke: bool, engine: str = "interp",
+                   case: str | None = None) -> dict:
     """One entry per rank: ideal + routed simulation on the 16x16 mesh."""
     import numpy as np
 
-    from repro.core import CGRA, map_1d, map_2d, map_3d, simulate
+    from repro.core import map_1d, map_2d, map_3d
     from repro.core.spec import heat_3d, paper_stencil_1d, paper_stencil_2d
-    from repro.fabric import FabricTopology, place, route
+    from repro.fabric import FabricTopology
 
     if smoke:
         specs = [("1d", paper_stencil_1d(n=1200, rx=8), map_1d, 8),
@@ -47,19 +100,16 @@ def artifact_cases(smoke: bool) -> dict:
                  ("2d", paper_stencil_2d(ny=64, nx=128, r=12), map_2d, 8),
                  ("3d", heat_3d(16, 24, 32, dtype="float64"), map_3d, 8)]
 
-    rng = np.random.default_rng(0)
     topo = FabricTopology.mesh(16, 16)
+    base = "vector" if engine == "vector" else "interp"
     cases = {}
     for name, spec, mapper, w in specs:
-        x = rng.normal(size=spec.grid_shape)
-        plan_ideal = mapper(spec, workers=w)
-        plan = mapper(spec, workers=w)
-        rf = route(place(plan, topo, seed=0))
-        t0 = time.perf_counter()
-        ideal = simulate(plan_ideal, x, CGRA)
-        routed = simulate(plan, x, CGRA, fabric=rf)
-        wall_s = time.perf_counter() - t0      # the two simulate() calls only
-        assert np.array_equal(ideal.output, routed.output)
+        if case and name != case:
+            continue
+        x = np.random.default_rng(0).normal(size=spec.grid_shape)
+        mk = lambda: mapper(spec, workers=w)            # noqa: E731
+        ideal, routed, rf, wi, wr, plan = _sim_pair(mk, x, base, topo)
+        wall_s = wi + wr
         s = rf.stats()
         cases[name] = {
             "grid": list(spec.grid_shape), "radii": list(spec.radii),
@@ -78,10 +128,16 @@ def artifact_cases(smoke: bool) -> dict:
             "stall_cycles": routed.fabric["stall_cycles"],
             "sim_wall_s": round(wall_s, 3),
         }
+        if engine == "both":
+            vi, vr, _, vwi, vwr, _ = _sim_pair(mk, x, "vector", topo)
+            _assert_engines_agree(name, (ideal, routed), (vi, vr))
+            cases[name]["sim_wall_s_vector"] = round(vwi + vwr, 3)
+            cases[name]["vector_speedup"] = round(wall_s / (vwi + vwr), 2)
     return cases
 
 
-def program_artifact_cases(smoke: bool) -> dict:
+def program_artifact_cases(smoke: bool, engine: str = "interp",
+                           case: str | None = None) -> dict:
     """Program pipelines: fused multi-op DAG (ideal + routed on the 16x16
     mesh) vs the same ops run as separate store-to-memory sweeps."""
     import numpy as np
@@ -98,17 +154,23 @@ def program_artifact_cases(smoke: bool) -> dict:
         progs = [("heat2_pipeline", two_stage_heat(48, 64), 8),
                  ("hdiff", hdiff_program(48, 64), 8)]
 
-    rng = np.random.default_rng(0)
     topo = FabricTopology.mesh(16, 16)
+    base = "vector" if engine == "vector" else "interp"
     cases = {}
     for name, prog, w in progs:
+        if case and name != case:
+            continue
+        rng = np.random.default_rng(0)
         inputs = {f: rng.normal(size=prog.grid_shape)
                   for f in prog.in_fields}
-        ideal, _ = simulate_program(lower(prog, workers=w), inputs, CGRA)
-        plan = lower(prog, workers=w)
+        mk = lambda: lower(prog, workers=w)             # noqa: E731
+        plan = mk()
+        x = plan.pack_inputs(inputs)
         rf = route(place(plan, topo, seed=0))
+        ideal = simulate_program(mk(), inputs, CGRA, engine=base)[0]
         t0 = time.perf_counter()
-        routed, _ = simulate_program(plan, inputs, CGRA, fabric=rf)
+        routed, _ = simulate_program(plan, inputs, CGRA, fabric=rf,
+                                     engine=base)
         wall_s = time.perf_counter() - t0
         assert np.array_equal(ideal.output, routed.output)
         # separate sweeps: every op as its own single-op program (each one a
@@ -121,11 +183,11 @@ def program_artifact_cases(smoke: bool) -> dict:
             ins = {f: rng.normal(size=prog.grid_shape)
                    for f in solo.in_fields}
             pl = lower(solo, workers=w)
-            sep_ideal += simulate_program(pl, ins, CGRA)[0].cycles
+            sep_ideal += simulate_program(pl, ins, CGRA, engine=base)[0].cycles
             pl = lower(solo, workers=w)
             rfo = route(place(pl, topo, seed=0))
-            sep_routed += simulate_program(pl, ins, CGRA,
-                                           fabric=rfo)[0].cycles
+            sep_routed += simulate_program(pl, ins, CGRA, fabric=rfo,
+                                           engine=base)[0].cycles
         assert ideal.cycles < sep_ideal and routed.cycles < sep_routed
         s = rf.stats()
         cases[name] = {
@@ -147,33 +209,131 @@ def program_artifact_cases(smoke: bool) -> dict:
             "stall_cycles": routed.fabric["stall_cycles"],
             "sim_wall_s": round(wall_s, 3),
         }
+        if engine == "both":
+            vi, vr, _, _, vwr, _ = _sim_pair(mk, x, "vector", topo)
+            _assert_engines_agree(name, (ideal, routed), (vi, vr))
+            # comparable number: the routed sim alone, like sim_wall_s
+            cases[name]["sim_wall_s_vector"] = round(vwr, 3)
+            cases[name]["vector_speedup"] = round(wall_s / vwr, 2)
     return cases
 
 
-def write_artifact(path: str, smoke: bool) -> None:
-    art = {
-        "schema": "bench_pr2/v1",
-        "config": "smoke" if smoke else "full",
-        "fabric": "mesh16x16",
-        "cases": artifact_cases(smoke),
-    }
+def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
+    """BENCH_pr4: interpreter vs compiled vector engine, wall-clock and
+    speedup on the pr2 single-op cases and the pr3 program pipelines (at
+    their full 48x64/w8 size in every config — that is the paper-scale
+    claim), plus one large program case only the vector engine runs."""
+    import numpy as np
+
+    from repro.core import map_1d, map_2d, map_3d
+    from repro.core.spec import heat_3d, paper_stencil_1d, paper_stencil_2d
+    from repro.fabric import FabricTopology
+    from repro.program import hdiff_program, lower, two_stage_heat
+
+    topo = FabricTopology.mesh(16, 16)
+    if smoke:
+        singles = [("1d", paper_stencil_1d(n=1200, rx=8), map_1d, 8),
+                   ("2d", paper_stencil_2d(ny=30, nx=48, r=12), map_2d, 8),
+                   ("3d", heat_3d(10, 12, 16, dtype="float64"), map_3d, 8)]
+    else:
+        singles = [("1d", paper_stencil_1d(n=9720, rx=8), map_1d, 8),
+                   ("2d", paper_stencil_2d(ny=64, nx=128, r=12), map_2d, 8),
+                   ("3d", heat_3d(16, 24, 32, dtype="float64"), map_3d, 8)]
+    progs = [("heat2_pipeline", two_stage_heat(48, 64), 8),
+             ("hdiff", hdiff_program(48, 64), 8)]
+    large_grid = (96, 128) if smoke else (256, 512)
+
+    cases = {}
+
+    def record(name, kind, grid, w, mk, mk_x):
+        if case and name != case:
+            return
+        plan0 = mk()
+        x = mk_x(plan0)
+        vi, vr, rf, vwi, vwr, _ = _sim_pair(mk, x, "vector", topo)
+        wall_v = vwi + vwr
+        entry = {
+            "kind": kind, "grid": list(grid), "workers": w,
+            "pe_instructions": len(plan0.dfg.nodes),
+            "cycles_ideal": vi.cycles, "cycles_routed": vr.cycles,
+            "token_hops": vr.fabric["token_hops"],
+            "stall_cycles": vr.fabric["stall_cycles"],
+            "vector_wall_s": round(wall_v, 3),
+        }
+        if kind == "large-vector-only":
+            # the whole point of the compiled engine: this grid is out of
+            # the interpreter's reach (≈25x the vector wall).
+            entry["interp_wall_s"] = None
+            entry["speedup"] = None
+            entry["engines"] = ["vector"]
+        else:
+            ii, ir, _, iwi, iwr, _ = _sim_pair(mk, x, "interp", topo)
+            wall_i = iwi + iwr
+            _assert_engines_agree(name, (ii, ir), (vi, vr))
+            entry["interp_wall_s"] = round(wall_i, 3)
+            entry["speedup"] = round(wall_i / wall_v, 2)
+            entry["engines"] = ["interp", "vector"]
+        cases[name] = entry
+
+    def prog_x(pl):
+        ins = {f: np.random.default_rng(0).normal(size=pl.spec.grid_shape)
+               for f in pl.in_fields}
+        return pl.pack_inputs(ins)
+
+    for name, spec, mapper, w in singles:
+        record(name, "single-op", spec.grid_shape, w,
+               lambda: mapper(spec, workers=w),
+               lambda pl: np.random.default_rng(0).normal(
+                   size=spec.grid_shape))
+    for name, prog, w in progs:
+        record(name, "program", prog.grid_shape, w,
+               lambda: lower(prog, workers=w), prog_x)
+    prog = two_stage_heat(*large_grid)
+    record("large_heat2_pipeline", "large-vector-only", large_grid, 8,
+           lambda: lower(prog, workers=8), prog_x)
+    return cases
+
+
+def _write_snapshot(path: str, schema: str, smoke: bool, case: str | None,
+                    cases: dict, **extra) -> None:
+    """Shared artifact writer.  A ``--case`` filter that matches nothing in
+    this artifact leaves the file untouched (the artifacts' case namespaces
+    are disjoint, so a multi-artifact run with one --case is expected to
+    skip the others)."""
+    if not cases:
+        if case:
+            print(f"--case {case!r}: no {schema} case matches; "
+                  f"{path} left untouched", file=sys.stderr)
+            return
+        raise ValueError(f"no cases produced for {schema}")
+    art = {"schema": schema, "config": "smoke" if smoke else "full",
+           "fabric": "mesh16x16", **extra, "cases": cases}
     with open(path, "w") as f:
         json.dump(art, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {path}", file=sys.stderr)
 
 
-def write_program_artifact(path: str, smoke: bool) -> None:
-    art = {
-        "schema": "bench_pr3/v1",
-        "config": "smoke" if smoke else "full",
-        "fabric": "mesh16x16",
-        "cases": program_artifact_cases(smoke),
-    }
-    with open(path, "w") as f:
-        json.dump(art, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {path}", file=sys.stderr)
+def write_artifact(path: str, smoke: bool, engine: str = "interp",
+                   case: str | None = None) -> None:
+    _write_snapshot(path, "bench_pr2/v1", smoke, case,
+                    artifact_cases(smoke, engine, case), engine=engine)
+
+
+def write_program_artifact(path: str, smoke: bool, engine: str = "interp",
+                           case: str | None = None) -> None:
+    _write_snapshot(path, "bench_pr3/v1", smoke, case,
+                    program_artifact_cases(smoke, engine, case),
+                    engine=engine)
+
+
+def write_engine_artifact(path: str, smoke: bool,
+                          case: str | None = None) -> None:
+    _write_snapshot(
+        path, "bench_pr4/v1", smoke, case, engine_artifact_cases(smoke, case),
+        note=("interp vs compiled vector engine; program cases run at "
+              "the pr3 full size (48x64, w8) in every config; the large "
+              "case is vector-only"))
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -182,13 +342,24 @@ def main(argv: list[str] | None = None) -> None:
                     help="write the JSON perf snapshot to PATH")
     ap.add_argument("--program-artifact", metavar="PATH",
                     help="write the program-pipeline snapshot to PATH")
+    ap.add_argument("--engine-artifact", metavar="PATH",
+                    help="write the interp-vs-vector engine snapshot to PATH")
+    ap.add_argument("--engine", choices=("interp", "vector", "both"),
+                    default="interp",
+                    help="simulation backend for the pr2/pr3 artifacts; "
+                    "'both' cross-validates and records per-engine walls")
+    ap.add_argument("--case", metavar="NAME",
+                    help="restrict artifacts to one named case")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grids (fast CI configuration)")
     ap.add_argument("--artifact-only", action="store_true",
-                    help="skip the CSV benchmark modules (needs --artifact)")
+                    help="skip the CSV benchmark modules (needs an artifact)")
     args = ap.parse_args(argv)
-    if args.artifact_only and not (args.artifact or args.program_artifact):
-        ap.error("--artifact-only requires --artifact/--program-artifact")
+    any_artifact = (args.artifact or args.program_artifact
+                    or args.engine_artifact)
+    if args.artifact_only and not any_artifact:
+        ap.error("--artifact-only requires --artifact/--program-artifact/"
+                 "--engine-artifact")
 
     failed = 0
     if not args.artifact_only:
@@ -208,15 +379,17 @@ def main(argv: list[str] | None = None) -> None:
                 print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
                 traceback.print_exc(file=sys.stderr)
 
-    if args.artifact:
+    for path, writer in ((args.artifact, write_artifact),
+                         (args.program_artifact, write_program_artifact)):
+        if path:
+            try:
+                writer(path, args.smoke, args.engine, args.case)
+            except Exception:
+                failed += 1
+                traceback.print_exc(file=sys.stderr)
+    if args.engine_artifact:
         try:
-            write_artifact(args.artifact, args.smoke)
-        except Exception:
-            failed += 1
-            traceback.print_exc(file=sys.stderr)
-    if args.program_artifact:
-        try:
-            write_program_artifact(args.program_artifact, args.smoke)
+            write_engine_artifact(args.engine_artifact, args.smoke, args.case)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)

@@ -44,6 +44,7 @@ class Edge:
     capacity: Optional[int] = None       # None = unbounded
     q: deque = dataclasses.field(default_factory=deque)
     max_occupancy: int = 0
+    eid: int = -1                        # dense id, assigned by DFG.finalize()
 
     def full(self) -> bool:
         return self.capacity is not None and len(self.q) >= self.capacity
@@ -75,6 +76,9 @@ class DFG:
         self.name = name
         self.nodes: list[Node] = []
         self._ids = itertools.count()
+        self._version = 0                 # bumped on add/connect
+        self._finalized_version = -1
+        self._edge_list: list[Edge] = []
 
     # ----- construction -----------------------------------------------------
     def add(self, op: str, name: str = "", *, stage: str = "", worker: int = -1,
@@ -82,6 +86,7 @@ class DFG:
         n = Node(nid=next(self._ids), op=op, name=name or f"{op}{worker}",
                  stage=stage, worker=worker, params=params)
         self.nodes.append(n)
+        self._version += 1
         return n
 
     def connect(self, src: Node, dst: Node, port: int | None = None,
@@ -92,7 +97,39 @@ class DFG:
         # keep in_edges port-ordered
         dst.in_edges.append(e)
         dst.in_edges.sort(key=lambda ee: ee.dst_port)
+        self._version += 1
         return e
+
+    # ----- compile hooks (repro.core.engine) ---------------------------------
+    def finalize(self) -> list[Edge]:
+        """Assign dense ``Edge.eid`` ids (producer order, then port order) and
+        return the edge list.  Idempotent until the graph is mutated again;
+        node ``nid``s are already dense by construction."""
+        if self._finalized_version != self._version:
+            self._edge_list = []
+            for n in self.nodes:
+                for e in n.out_edges:
+                    e.eid = len(self._edge_list)
+                    self._edge_list.append(e)
+            self._finalized_version = self._version
+        return self._edge_list
+
+    def topo_order(self) -> list[Node]:
+        """Kahn topological order (worker pipelines are feed-forward DAGs)."""
+        indeg = {n.nid: len(n.in_edges) for n in self.nodes}
+        by_nid = {n.nid: n for n in self.nodes}
+        ready = [n for n in self.nodes if not indeg[n.nid]]
+        out: list[Node] = []
+        while ready:
+            n = ready.pop()
+            out.append(n)
+            for e in n.out_edges:
+                indeg[e.dst.nid] -= 1
+                if indeg[e.dst.nid] == 0:
+                    ready.append(by_nid[e.dst.nid])
+        if len(out) != len(self.nodes):
+            raise ValueError(f"DFG {self.name!r} has a cycle; cannot compile")
+        return out
 
     # ----- inventory ---------------------------------------------------------
     def pe_counts(self) -> dict[str, int]:

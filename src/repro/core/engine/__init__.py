@@ -1,0 +1,13 @@
+"""Simulation backends: reference interpreter + compiled vector engine.
+
+``repro.core.simulator.simulate(..., engine="interp"|"vector")`` dispatches
+here.  Both backends implement identical semantics over the same
+:class:`~repro.core.engine.common.RawStats` contract; the vector engine
+compiles the DFG once into struct-of-arrays tables
+(:mod:`repro.core.engine.compile`) and runs each cycle as a handful of
+vectorized numpy passes (:mod:`repro.core.engine.vector`).
+"""
+from repro.core.engine.common import RawStats, SimDeadlock
+from repro.core.engine.compile import CompiledPlan, compile_plan
+
+__all__ = ["RawStats", "SimDeadlock", "CompiledPlan", "compile_plan"]

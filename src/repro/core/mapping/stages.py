@@ -167,7 +167,12 @@ class TapChain:
             f = g.add("filter", f"flt_{tag}_a{axis}_w{worker}_t{j}",
                       stage="compute", worker=worker, axis=axis,
                       m=mask.lead, n=mask.kept, keep=mask.keep,
-                      keep_count=mask.kept, **extra)
+                      keep_count=mask.kept,
+                      # compiled form of the same pattern: the vector engine
+                      # evaluates digit windows over np.arange instead of
+                      # calling ``keep`` once per token.
+                      keep_vec={"windows": mask.windows,
+                                "counts": src.spec.counts}, **extra)
             e_src = g.connect(src.node, f, capacity=queue_capacity)
             if src_min:
                 min_caps[id(e_src)] = max(min_caps.get(id(e_src), 0), src_min)

@@ -1,4 +1,4 @@
-"""Cycle-level CGRA simulator (paper §VIII).
+"""Cycle-level CGRA simulator (paper §VIII) — backend-dispatching facade.
 
 Models a triggered-instruction fabric: every node (= instruction mapped to a
 PE) *fires* in a cycle iff all its input queues hold data and all its output
@@ -9,14 +9,21 @@ credit carried across cycles).
 
 The simulator *executes the numerics*: it produces the output grid, so every
 mapping is validated end-to-end against ``core.reference`` — not just timed.
-Program-graph plans (``repro.program``) are simulated by the same loop: they
-carry several ``cmp`` completion nodes (one per output field — the run ends
-when *all* have fired), ``imux`` re-interleave nodes, and an ``out_shape``
-that packs one grid-sized slot per output field.
+Program-graph plans (``repro.program``) are simulated by the same machinery:
+they carry several ``cmp`` completion nodes (one per output field — the run
+ends when *all* have fired), ``imux`` re-interleave nodes, and an
+``out_shape`` that packs one grid-sized slot per output field.
 
-Synchronous two-phase semantics: firing decisions for cycle t use queue state
-at the start of t (push+pop on the same queue in one cycle is allowed, as in
-real hardware FIFOs; a push into a queue that was full at cycle start is not).
+Two backends implement the identical semantics (see ``docs/simulator.md``):
+
+* ``engine="interp"`` — :mod:`repro.core.engine.interp`, the reference
+  per-node Python interpreter (the oracle).
+* ``engine="vector"`` — :mod:`repro.core.engine.vector`, the compiled
+  struct-of-arrays engine: the DFG is compiled once into dense numpy tables
+  (op-kind buckets, CSR edge indices, one ring-buffer pool for all queues)
+  and each cycle runs as a handful of vectorized passes per op-kind.  Cycle
+  counts, fire counts, hop/stall stats and output grids are bit-identical to
+  the interpreter; wall-clock is 5-20x faster on program-pipeline grids.
 
 **Network-aware mode** (``fabric=`` a placed-and-routed ``RoutedFabric`` from
 ``repro.fabric``): every producer→consumer queue is no longer a free one-hop
@@ -31,21 +38,22 @@ cycle counts are >= ideal ones.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import TYPE_CHECKING
 
 import numpy as np
 
-from repro.core.dfg import DFG, Edge, FLOPS_PER_OP, Node
+from repro.core.engine import interp as _interp
+from repro.core.engine import vector as _vector
+from repro.core.engine.common import SimDeadlock, mem_elems_per_cycle
 from repro.core.mapping import MappingPlan
 from repro.core.roofline import Machine, analyze
 
 if TYPE_CHECKING:  # pragma: no cover - avoids core <-> fabric import cycle
     from repro.fabric.route import RoutedFabric
 
+__all__ = ["SimDeadlock", "SimResult", "simulate", "ENGINES"]
 
-class SimDeadlock(RuntimeError):
-    pass
+ENGINES = ("interp", "vector")
 
 
 @dataclasses.dataclass
@@ -75,80 +83,11 @@ class SimResult:
         return s
 
 
-class _Network:
-    """Per-simulation on-chip network state (network-aware mode).
-
-    Tokens pushed onto a routed edge ride through a transit pipeline:
-    arrival = injection cycle + hops, plus any store-and-forward stalls when
-    a link's words-per-cycle budget is already spoken for in a cycle.  A
-    producer's fan-out is one multicast: shared tree links are crossed once
-    per token (booked once per firing), not once per edge.
-    """
-
-    def __init__(self, fabric: "RoutedFabric", g: DFG):
-        from repro.fabric.route import edge_key  # deferred: no import cycle
-        self.wpc = {k: l.words_per_cycle for k, l in
-                    fabric.topo.links.items()}
-        self.routes: dict[int, tuple] = {}
-        self.edge_by_id: dict[int, Edge] = {}
-        for e in g.edges():
-            self.routes[id(e)] = fabric.routes[edge_key(e)]
-            self.edge_by_id[id(e)] = e
-        self.transit: dict[int, deque] = {eid: deque() for eid in self.routes}
-        self.used: dict[tuple, int] = {}     # (link, cycle) -> words in flight
-        self.last_arrival: dict[int, int] = {}
-        self.token_hops = 0
-        self.stall_cycles = 0            # link-contention wait, summed
-
-    def broadcast(self, nd: Node, v, cycle: int) -> None:
-        booked: dict[tuple, int] = {}    # link -> slot of this token's copy
-        for e in nd.out_edges:
-            links = self.routes[id(e)]
-            if not links:                # co-resident PEs: ideal local queue
-                e.push(v)
-                continue
-            t = cycle
-            for lk in links:
-                if lk in booked:         # ride the multicast copy
-                    t = booked[lk] + 1
-                    continue
-                cap = self.wpc[lk]
-                slot = t
-                while self.used.get((lk, slot), 0) >= cap:
-                    slot += 1
-                self.stall_cycles += slot - t
-                self.used[(lk, slot)] = self.used.get((lk, slot), 0) + 1
-                booked[lk] = slot
-                self.token_hops += 1
-                t = slot + 1
-            arr = max(t, self.last_arrival.get(id(e), 0))  # FIFO per edge
-            self.last_arrival[id(e)] = arr
-            self.transit[id(e)].append((arr, v))
-
-    def deliver(self, cycle: int) -> None:
-        # slot searches always start at the current cycle, so bookings for
-        # past cycles can never be read again — drop them periodically to
-        # keep memory flat over long simulations.
-        if cycle % 4096 == 0 and self.used:
-            self.used = {k: v for k, v in self.used.items() if k[1] >= cycle}
-        for eid, dq in self.transit.items():
-            if dq and dq[0][0] <= cycle:
-                e = self.edge_by_id[eid]
-                while dq and dq[0][0] <= cycle:
-                    e.push(dq.popleft()[1])
-
-    def edge_full(self, e: Edge) -> bool:
-        return e.capacity is not None and \
-            len(e.q) + len(self.transit[id(e)]) >= e.capacity
-
-    def in_flight(self) -> bool:
-        return any(self.transit.values())
-
-
 def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
              max_cycles: int = 50_000_000,
              mem_efficiency: float = 1.0,
-             fabric: "RoutedFabric | None" = None) -> SimResult:
+             fabric: "RoutedFabric | None" = None,
+             engine: str = "interp") -> SimResult:
     """``mem_efficiency`` derates the memory-port bandwidth to model cache
     conflict misses (the paper observed "more conflict misses in the cache
     for stencil 2D" — its cycle-accurate 2D result corresponds to ~0.80;
@@ -156,200 +95,34 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
 
     ``fabric``: a ``repro.fabric.route.RoutedFabric`` for this plan turns on
     network-aware mode (routed hop latency + link-bandwidth contention).
+
+    ``engine``: ``"interp"`` (reference per-node interpreter) or ``"vector"``
+    (compiled struct-of-arrays engine, identical results, much faster).
     """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose one of {ENGINES}")
     spec = plan.spec
-    g = plan.dfg
     flat_in = np.asarray(x, dtype=np.float64).reshape(-1)
     # program plans (repro.program) pack several output fields into one image
     out_shape = tuple(getattr(plan, "out_shape", None) or spec.grid_shape)
     flat_out = np.zeros(int(np.prod(out_shape)), dtype=np.float64)
 
-    # per-node runtime state ---------------------------------------------------
-    state: dict[int, dict] = {}
-    done_pending = 0
-    for nd in g.nodes:
-        st: dict = {"k": 0}
-        if nd.op == "sync":
-            st["count"] = 0
-            st["emitted"] = False
-        elif nd.op == "cmp":
-            st["fired"] = False
-            done_pending += 1
-        state[nd.nid] = st
-    assert done_pending, "graph has no completion (cmp) node"
+    epc = mem_elems_per_cycle(spec, machine, mem_efficiency)
+    backend = _interp.run if engine == "interp" else _vector.run
+    stats = backend(plan, flat_in, flat_out, epc, max_cycles, fabric)
 
-    net = _Network(fabric, g) if fabric is not None else None
-
-    elems_per_cycle = mem_efficiency * machine.bw_gbps / machine.clock_ghz / (
-        8 if spec.dtype == "float64" else spec.bytes_per_elem)
-    credit = 0.0
-    cycles = 0
-    fires: dict[str, int] = {}
-    loads = stores = flops = 0
-    finished = False
-
-    # memory ops arbitrate for bandwidth with *rotating* priority (fair
-    # round-robin, like the CGRA's memory-port arbiter); everything else is
-    # order-independent because eligibility is snapshotted per cycle.
-    mem_nodes = [nd for nd in g.nodes if nd.op in ("load", "store")]
-    other_nodes = [nd for nd in g.nodes if nd.op not in ("load", "store")]
-    n_mem = max(1, len(mem_nodes))
-
-    nodes = g.nodes
-    # hot-loop records: (node, nid, op, state, in_edges, out_edges) resolved
-    # once — the edge lists are stable for the whole simulation, and skipping
-    # the per-cycle attribute lookups is a measurable win on large graphs.
-    # Eligibility snapshots are flat lists indexed by nid (nids are dense).
-    rec = {nd.nid: (nd, nd.nid, nd.op, state[nd.nid], nd.in_edges,
-                    nd.out_edges) for nd in nodes}
-    # imux pops exactly one (pattern-selected) port per firing; snapshotting
-    # all-ports-nonempty would both stall it and deadlock re-interleaves.
-    snap_recs = [rec[nd.nid] for nd in nodes if nd.op != "imux"]
-    imux_recs = [rec[nd.nid] for nd in nodes if nd.op == "imux"]
-    mem_recs = [rec[nd.nid] for nd in mem_nodes]
-    other_recs = [rec[nd.nid] for nd in other_nodes]
-    n_ids = 1 + max(nd.nid for nd in nodes)
-    in_avail = [False] * n_ids
-    out_free = [False] * n_ids
-    while not finished:
-        if cycles >= max_cycles:
-            raise SimDeadlock(f"exceeded max_cycles={max_cycles}")
-        cycles += 1
-        credit = min(credit + elems_per_cycle, 4 * elems_per_cycle)
-        if net is not None:
-            net.deliver(cycles)          # arrivals land before the snapshot
-        # phase 1: snapshot eligibility -----------------------------------
-        if net is None:
-            for _, nid, _, _, ine, oute in snap_recs:
-                in_avail[nid] = all(e.q for e in ine)
-                out_free[nid] = all(not e.full() for e in oute)
-        else:
-            for _, nid, _, _, ine, oute in snap_recs:
-                in_avail[nid] = all(e.q for e in ine)
-                out_free[nid] = all(not net.edge_full(e) for e in oute)
-        for nd_, nid, _, stx, ine, oute in imux_recs:
-            pat = nd_.params["pattern"]
-            in_avail[nid] = bool(ine[pat[stx["k"] % len(pat)]].q)
-            out_free[nid] = (all(not e.full() for e in oute) if net is None
-                             else all(not net.edge_full(e) for e in oute))
-        any_fired = False
-        # phase 2: execute. Memory nodes first in rotated order (fair
-        # bandwidth arbitration), then the rest.
-        rot = cycles % n_mem
-        ordered = mem_recs[rot:] + mem_recs[:rot] + other_recs
-        for nd, nid, op, st, in_edges, out_edges in ordered:
-            if op == "addr":
-                if st["k"] >= nd.params["count"] or not out_free[nid]:
-                    continue
-                v = st["k"]
-                st["k"] += 1
-            elif op == "load":
-                if not (in_avail[nid] and out_free[nid] and credit >= 1.0):
-                    continue
-                a = in_edges[0].q.popleft()
-                v = float(flat_in[nd.params["indices"][a]])
-                credit -= 1.0
-                loads += 1
-            elif op == "store":
-                if not (in_avail[nid] and out_free[nid] and credit >= 1.0):
-                    continue
-                a = in_edges[0].q.popleft()
-                val = in_edges[1].q.popleft()
-                flat_out[nd.params["indices"][a]] = val
-                credit -= 1.0
-                stores += 1
-                v = 1  # done token to sync
-            elif op == "filter":
-                if not in_avail[nid]:
-                    continue
-                keep = nd.params["keep"](st["k"])
-                if keep and not out_free[nid]:
-                    continue  # must hold the token until downstream has space
-                tok = in_edges[0].q.popleft()
-                st["k"] += 1
-                if not keep:
-                    fires[op] = fires.get(op, 0) + 1
-                    any_fired = True
-                    continue
-                v = tok
-            elif op == "mul":
-                if not (in_avail[nid] and out_free[nid]):
-                    continue
-                v = nd.params["coeff"] * in_edges[0].q.popleft()
-                flops += 1
-            elif op == "mac":
-                if not (in_avail[nid] and out_free[nid]):
-                    continue
-                p = in_edges[0].q.popleft()
-                v = p + nd.params["coeff"] * in_edges[1].q.popleft()
-                flops += 2
-            elif op == "add":
-                if not (in_avail[nid] and out_free[nid]):
-                    continue
-                v = in_edges[0].q.popleft() + in_edges[1].q.popleft()
-                flops += 1
-            elif op == "sync":
-                if st["emitted"] or not in_avail[nid]:
-                    continue
-                in_edges[0].q.popleft()
-                st["count"] += 1
-                fires[op] = fires.get(op, 0) + 1
-                any_fired = True
-                if st["count"] == nd.params["expected"] and out_free[nid]:
-                    st["emitted"] = True
-                    v = 1
-                else:
-                    continue
-            elif op == "imux":  # re-interleave: pop the pattern-selected port
-                if not (in_avail[nid] and out_free[nid]):
-                    continue
-                pat = nd.params["pattern"]
-                v = in_edges[pat[st["k"] % len(pat)]].q.popleft()
-                st["k"] += 1
-            elif op == "cmp":  # a done-combiner (programs may carry several)
-                if st["fired"] or not in_avail[nid]:
-                    continue
-                for e in in_edges:
-                    e.q.popleft()
-                st["fired"] = True
-                done_pending -= 1
-                if done_pending == 0:
-                    finished = True
-                fires[op] = fires.get(op, 0) + 1
-                any_fired = True
-                continue
-            else:  # mux/demux/copy pass-through
-                if not (in_avail[nid] and out_free[nid]):
-                    continue
-                v = in_edges[0].q.popleft()
-            nd.fires += 1
-            fires[op] = fires.get(op, 0) + 1
-            any_fired = True
-            if net is None:
-                for e in out_edges:
-                    e.push(v)
-            else:
-                net.broadcast(nd, v, cycles)
-        if not any_fired and not finished:
-            if net is not None and net.in_flight():
-                continue                 # tokens still riding the network
-            stuck = [f"{nd.name}({nd.op}) in={[len(e.q) for e in nd.in_edges]} "
-                     f"outfull={[e.full() for e in nd.out_edges]}"
-                     for nd in nodes if any(e.q for e in nd.in_edges)][:8]
-            raise SimDeadlock(
-                f"deadlock at cycle {cycles}; sample blocked nodes: {stuck}")
-
-    gflops = (flops / cycles) * machine.clock_ghz
+    gflops = (stats.flops / stats.cycles) * machine.clock_ghz
     roof = analyze(spec, machine, workers=plan.workers)
-    max_q = sum(e.max_occupancy for e in g.edges())
     fabric_stats = None
     if fabric is not None:
         fabric_stats = {**fabric.stats(),
-                        "token_hops": net.token_hops,
-                        "stall_cycles": net.stall_cycles}
+                        "token_hops": stats.token_hops,
+                        "stall_cycles": stats.stall_cycles}
     return SimResult(
-        cycles=cycles, flops=flops, loads=loads, stores=stores, fires=fires,
+        cycles=stats.cycles, flops=stats.flops, loads=stats.loads,
+        stores=stats.stores, fires=stats.fires,
         output=flat_out.reshape(out_shape), gflops=gflops,
         pct_of_roofline=gflops / roof.achievable_gflops,
         pct_of_compute_peak=gflops / machine.peak_gflops,
-        max_queue_total=max_q, mac_pes=plan.mac_pes, fabric=fabric_stats)
+        max_queue_total=stats.max_queue_total, mac_pes=plan.mac_pes,
+        fabric=fabric_stats)

@@ -85,6 +85,16 @@ class RoutedFabric:
     def hops(self, e: Edge) -> int:
         return len(self.routes[edge_key(e)])
 
+    def link_index(self) -> dict[LinkKey, int]:
+        """Dense link ids (topology iteration order) for engines that keep
+        per-link bandwidth state in flat arrays instead of dict probes
+        (``repro.core.engine.compile.compile_network``)."""
+        return {lk: i for i, lk in enumerate(self.topo.links)}
+
+    def words_per_cycle(self) -> list[int]:
+        """Per-link dynamic bandwidth, aligned with :meth:`link_index`."""
+        return [l.words_per_cycle for l in self.topo.links.values()]
+
     # ----- congestion / utilization reporting -------------------------------
     def hotspots(self, k: int = 5) -> list[tuple[LinkKey, int, int]]:
         """Top-k links by channel load: (link, trees, token traffic)."""

@@ -165,7 +165,11 @@ def _remux(g: DFG, field: str, sources: list[WorkerStream], w_src: int,
             kept = kept_row * math.prod(src.spec.counts[:-1])
             f = g.add("filter", f"rflt_{field}w{w_dst}_c{c}_p{p}",
                       stage="compute", worker=c, m=0, n=kept, keep=keep,
-                      keep_count=kept, **sg)
+                      keep_count=kept,
+                      # compiled form for the vector engine: keep(s) iff
+                      # (off + (s % cnt) * step) % mod == 0.
+                      keep_mod={"cnt": cnt_p, "step": w_src,
+                                "off": start_p - target, "mod": w_dst}, **sg)
             g.connect(src.node, f, capacity=queue_capacity)
             e = g.connect(f, imux, port=port_of[p], capacity=queue_capacity)
             # the imux drains a port only at its pattern slots; a full row of
@@ -288,7 +292,9 @@ def lower(program: StencilProgram, workers, queue_capacity: int | None = None,
                     f = g.add("filter", f"flt_{op.name}_w{c}_i{k}",
                               stage="compute", worker=c, m=mask.lead,
                               n=mask.kept, keep=mask.keep,
-                              keep_count=mask.kept, **sg)
+                              keep_count=mask.kept,
+                              keep_vec={"windows": mask.windows,
+                                        "counts": src.spec.counts}, **sg)
                     e_src = g.connect(src.node, f, capacity=queue_capacity)
                     smin = src_cap(op, fname, src.spec.axes[-1][2])
                     min_caps[id(e_src)] = max(min_caps.get(id(e_src), 0),

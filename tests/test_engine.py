@@ -1,0 +1,194 @@
+"""Cross-validation: compiled vector engine vs the interpreter oracle.
+
+Every observable of :func:`repro.core.simulate` must be *identical* across
+``engine="interp"`` and ``engine="vector"``: cycle counts, per-op and
+per-node fire counts, load/store/flop totals, queue-occupancy telemetry,
+network hop/stall stats, and bit-identical output grids — on single-op
+mappings of every rank, temporal layers, program pipelines (including the
+imux re-interleave fallback), ideal and routed, bounded and unbounded
+queues, plus the failure paths (deadlock, max_cycles)."""
+import numpy as np
+import pytest
+
+from repro.core import CGRA, SimDeadlock, map_1d, map_2d, map_3d, simulate
+from repro.core.spec import (StencilSpec, heat_2d, heat_3d, paper_stencil_2d)
+from repro.fabric import FabricTopology, place, route
+from repro.program import (CombineOp, StencilOp, StencilProgram,
+                           hdiff_program, lower, two_stage_heat)
+
+ENGINES = ("interp", "vector")
+
+
+def _coeffs(rng, r):
+    return tuple((rng.normal(size=2 * r + 1) / (2 * r + 1)).tolist())
+
+
+def run_both(mk_plan, x, routed=False, **kw):
+    """Simulate a freshly-built plan once per engine (+ fresh routes)."""
+    out = []
+    for engine in ENGINES:
+        plan = mk_plan()
+        fab = None
+        if routed:
+            fab = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+        out.append((plan, simulate(plan, x, CGRA, fabric=fab, engine=engine,
+                                   **kw)))
+    return out
+
+
+def assert_identical(case):
+    (plan_i, a), (plan_v, b) = case
+    assert a.cycles == b.cycles
+    assert a.fires == b.fires
+    assert (a.loads, a.stores, a.flops) == (b.loads, b.stores, b.flops)
+    assert a.max_queue_total == b.max_queue_total
+    assert a.output.shape == b.output.shape
+    assert a.output.tobytes() == b.output.tobytes()      # bit-identical
+    # per-node fire counts (PE utilization) must agree node-for-node
+    fa = {n.name: n.fires for n in plan_i.dfg.nodes}
+    fb = {n.name: n.fires for n in plan_v.dfg.nodes}
+    assert fa == fb
+    if a.fabric is not None:
+        assert a.fabric["token_hops"] == b.fabric["token_hops"]
+        assert a.fabric["stall_cycles"] == b.fabric["stall_cycles"]
+
+
+@pytest.mark.parametrize("routed", [False, True])
+@pytest.mark.parametrize("n,r,w", [(120, 1, 3), (240, 2, 4), (510, 8, 6)])
+def test_1d_identical(rng, n, r, w, routed):
+    spec = StencilSpec((n,), (r,), (_coeffs(rng, r),), dtype="float64")
+    assert_identical(run_both(lambda: map_1d(spec, workers=w),
+                              rng.normal(size=n), routed=routed))
+
+
+@pytest.mark.parametrize("routed", [False, True])
+def test_2d_identical(rng, routed):
+    spec = paper_stencil_2d(ny=30, nx=48, r=12)
+    assert_identical(run_both(lambda: map_2d(spec, workers=8),
+                              rng.normal(size=(30, 48)), routed=routed))
+
+
+@pytest.mark.parametrize("routed", [False, True])
+def test_3d_identical(rng, routed):
+    spec = heat_3d(10, 12, 16, dtype="float64")
+    assert_identical(run_both(lambda: map_3d(spec, workers=8),
+                              rng.normal(size=(10, 12, 16)), routed=routed))
+
+
+def test_temporal_identical(rng):
+    spec = StencilSpec((360,), (2,), (_coeffs(rng, 2),), dtype="float64",
+                       timesteps=3)
+    assert_identical(run_both(lambda: map_1d(spec, workers=3),
+                              rng.normal(size=360)))
+
+
+def test_bounded_queues_identical(rng):
+    """auto_capacity plans exercise the bounded-queue (out_free) path."""
+    spec = heat_2d(18, 24, dtype="float64")
+    assert_identical(run_both(
+        lambda: map_2d(spec, workers=3, auto_capacity=True),
+        rng.normal(size=(18, 24))))
+
+
+def test_mem_efficiency_identical(rng):
+    spec = StencilSpec((300,), (3,), (_coeffs(rng, 3),), dtype="float64")
+    assert_identical(run_both(lambda: map_1d(spec, workers=5),
+                              rng.normal(size=300), mem_efficiency=0.8))
+
+
+@pytest.mark.parametrize("routed", [False, True])
+@pytest.mark.parametrize("mk", [lambda: two_stage_heat(24, 32),
+                                lambda: hdiff_program(24, 32)])
+def test_program_identical(mk, routed):
+    prog = mk()
+    rng = np.random.default_rng(1)
+    ins = {f: rng.normal(size=prog.grid_shape) for f in prog.in_fields}
+    x = lower(prog, workers=4).pack_inputs(ins)
+    assert_identical(run_both(lambda: lower(prog, workers=4), x,
+                              routed=routed))
+
+
+@pytest.mark.parametrize("routed", [False, True])
+def test_program_remux_identical(routed):
+    """Mismatched per-op worker counts insert the imux re-interleave."""
+    prog = two_stage_heat(24, 32)
+    rng = np.random.default_rng(1)
+    ins = {f: rng.normal(size=prog.grid_shape) for f in prog.in_fields}
+    workers = {"heat1": 2, "heat2": 4}
+    x = lower(prog, workers=workers).pack_inputs(ins)
+    assert_identical(run_both(lambda: lower(prog, workers=workers), x,
+                              routed=routed))
+
+
+def test_program_multi_output_identical():
+    """Fan-out + two output fields: several cmp completion nodes."""
+    lap = StencilOp("lap", heat_2d(20, 24, dtype="float64"), "inp", "lapf")
+    mix = CombineOp("mix", ("inp", "lapf"), (1.0, -4.0), "mixf")
+    prog = StencilProgram("twoout", [lap, mix], outputs=["lapf", "mixf"],
+                          grid_shape=(20, 24), dtype="float64")
+    rng = np.random.default_rng(2)
+    ins = {f: rng.normal(size=prog.grid_shape) for f in prog.in_fields}
+    x = lower(prog, workers=4).pack_inputs(ins)
+    assert_identical(run_both(lambda: lower(prog, workers=4), x))
+
+
+def test_wpc2_fabric_identical(rng):
+    """words_per_cycle > 1 links exercise the general (word-counting)
+    booking path instead of the wpc==1 fast path."""
+    spec = paper_stencil_2d(ny=30, nx=48, r=12)
+    x = rng.normal(size=(30, 48))
+    out = []
+    for engine in ENGINES:
+        plan = map_2d(spec, workers=8)
+        topo = FabricTopology.mesh(16, 16, words_per_cycle=2)
+        fab = route(place(plan, topo, seed=0))
+        out.append((plan, simulate(plan, x, CGRA, fabric=fab,
+                                   engine=engine)))
+    assert_identical(out)
+
+
+def test_deadlock_identical(rng):
+    """Starved queue capacities deadlock both engines at the same cycle
+    with the same blocked-node diagnostic."""
+    spec = heat_2d(18, 24, dtype="float64")
+    x = rng.normal(size=(18, 24))
+    msgs = []
+    for engine in ENGINES:
+        plan = map_2d(spec, workers=3, queue_capacity=1)
+        with pytest.raises(SimDeadlock) as ei:
+            simulate(plan, x, CGRA, max_cycles=200_000, engine=engine)
+        msgs.append(str(ei.value))
+    assert msgs[0] == msgs[1]
+    assert "deadlock at cycle" in msgs[0]
+
+
+def test_max_cycles_identical(rng):
+    spec = StencilSpec((120,), (1,), ((0.25, 0.5, 0.25),), dtype="float64")
+    x = rng.normal(size=120)
+    for engine in ENGINES:
+        plan = map_1d(spec, workers=3)
+        with pytest.raises(SimDeadlock, match="exceeded max_cycles=10"):
+            simulate(plan, x, CGRA, max_cycles=10, engine=engine)
+
+
+def test_vector_faster_on_routed_program():
+    """The point of the compiled engine: wall-clock on a routed program
+    pipeline.  Deliberately loose (best-of-2, 1.2x) so a loaded CI host
+    cannot flake it — BENCH_pr4.json tracks the real speedup, >=5x on the
+    full-size pr3 cases."""
+    import time
+    prog = two_stage_heat(24, 32)
+    rng = np.random.default_rng(1)
+    ins = {f: rng.normal(size=prog.grid_shape) for f in prog.in_fields}
+    x = lower(prog, workers=4).pack_inputs(ins)
+    walls = {}
+    for engine in ENGINES:
+        best = float("inf")
+        for _ in range(2):
+            plan = lower(prog, workers=4)
+            fab = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+            t0 = time.perf_counter()
+            simulate(plan, x, CGRA, fabric=fab, engine=engine)
+            best = min(best, time.perf_counter() - t0)
+        walls[engine] = best
+    assert walls["interp"] > 1.2 * walls["vector"], walls

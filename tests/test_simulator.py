@@ -106,6 +106,65 @@ def test_block_planner_fits_budget():
     assert bp2.fits and bp2.working_set_bytes <= 8 * 1024 * 1024
 
 
+def test_per_node_fires_match_aggregate(rng):
+    """Regression (PR 4): filter drops and sync count-ticks must increment
+    ``Node.fires`` like every other fire, so per-PE utilization derived from
+    per-node counters equals the per-op aggregate."""
+    spec = StencilSpec((120,), (1,), ((0.25, 0.5, 0.25),), dtype="float64")
+    plan = map_1d(spec, workers=3)
+    res = simulate(plan, rng.normal(size=120), CGRA)
+    per_node: dict[str, int] = {}
+    for nd in plan.dfg.nodes:
+        per_node[nd.op] = per_node.get(nd.op, 0) + nd.fires
+    assert per_node == res.fires
+    # filters consume the whole reader stream; keeps < consumes, and the
+    # dropped tokens must be visible in the per-node counters.
+    filters = [nd for nd in plan.dfg.nodes if nd.op == "filter"]
+    assert sum(nd.fires for nd in filters) > \
+        sum(nd.params["keep_count"] for nd in filters)
+    # syncs fire once per store token (no double-count on the done emission)
+    syncs = [nd for nd in plan.dfg.nodes if nd.op == "sync"]
+    assert sum(nd.fires for nd in syncs) == res.stores
+
+
+def test_mem_efficiency_derates_bandwidth(rng):
+    """mem_efficiency scales the memory-port element rate: cycles go up,
+    numerics are untouched."""
+    spec = paper_stencil_1d(n=1200, rx=8)
+    x = rng.normal(size=1200)
+    full = simulate(map_1d(spec, workers=6), x, CGRA)
+    half = simulate(map_1d(spec, workers=6), x, CGRA, mem_efficiency=0.5)
+    assert half.cycles > full.cycles
+    # the derated run is memory-bound: it cannot beat the halved port rate
+    elems = half.loads + half.stores
+    epc_half = 0.5 * CGRA.bw_gbps / CGRA.clock_ghz / 8
+    assert half.cycles >= elems / epc_half
+    assert np.array_equal(full.output, half.output)
+    assert half.gflops < full.gflops
+
+
+def test_deadlock_diagnostic_names_blocked_nodes(rng):
+    """The SimDeadlock message must point at the stuck part of the graph:
+    node names with their op kind and queue states."""
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, queue_capacity=1)
+    with pytest.raises(SimDeadlock) as ei:
+        simulate(plan, rng.normal(size=(18, 24)), CGRA, max_cycles=200_000)
+    msg = str(ei.value)
+    assert "deadlock at cycle" in msg
+    assert "(filter)" in msg or "(load)" in msg or "(addr)" in msg
+    assert "in=" in msg and "outfull=" in msg
+    # it names real nodes of this DFG
+    assert any(nd.name in msg for nd in plan.dfg.nodes)
+
+
+def test_max_cycles_overflow_raises(rng):
+    spec = StencilSpec((120,), (1,), ((0.25, 0.5, 0.25),), dtype="float64")
+    plan = map_1d(spec, workers=3)
+    with pytest.raises(SimDeadlock, match="exceeded max_cycles=25"):
+        simulate(plan, rng.normal(size=120), CGRA, max_cycles=25)
+
+
 def test_3d_oracle_supported(rng):
     """The spec/oracle are rank-generic (paper: 'can be extended to 3D')."""
     cz = (0.2, 0.5, 0.3)
