@@ -16,7 +16,11 @@ program-pipeline snapshot (BENCH_pr3.json: fused multi-op DAGs vs separate
 store-to-memory sweeps); ``--engine-artifact PATH`` writes the simulation-
 engine comparison snapshot (BENCH_pr4.json: interpreter vs compiled vector
 engine wall times + speedups, with a large vector-only case the interpreter
-could not afford); ``--smoke`` shrinks the grids so CI can afford it.
+could not afford); ``--explore [PATH]`` runs the mapping auto-tuner
+(``repro.explore``) on heat2d/star_3d/hdiff and writes the Pareto-front
+snapshot (BENCH_pr5.json: measured fronts over cycles/PEs/channel-load vs
+the analytical §VI baseline, evaluations cached in ``<PATH>.cache``);
+``--smoke`` shrinks the grids so CI can afford it.
 
 ``--engine {interp,vector,both}`` selects the simulation backend for the
 pr2/pr3 artifact cases — ``both`` times the two backends, asserts identical
@@ -24,7 +28,8 @@ cycles/fires/outputs (CI's engine-drift gate) and records per-engine wall
 times.  ``--case NAME`` restricts every artifact to one named case.
 
 ci.sh runs ``--artifact BENCH_pr2.json --program-artifact BENCH_pr3.json
---engine-artifact BENCH_pr4.json --engine both --smoke --artifact-only``.
+--engine-artifact BENCH_pr4.json --explore BENCH_pr5.json --engine both
+--smoke --artifact-only``.
 """
 from __future__ import annotations
 
@@ -294,6 +299,76 @@ def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
     return cases
 
 
+def explore_artifact_cases(smoke: bool, case: str | None = None,
+                           cache_path: str | None = None) -> dict:
+    """BENCH_pr5: the mapping auto-tuner (repro.explore) vs the paper's
+    analytical §VI worker choice, on heat2d, star_3d and the hdiff program
+    pipeline.  Every front is verified internally non-dominated and the
+    measured best must match or beat the analytical baseline's cycles."""
+    from repro.core import CGRA
+    from repro.core.spec import heat_2d, star_3d
+    from repro.explore import (Budget, EvalCache, EvalPoint, SpaceOptions,
+                               assert_non_dominated, explore, tile_candidates)
+    from repro.program import hdiff_program
+
+    mesh16 = (16, 16, "mesh")
+    if smoke:
+        heat = heat_2d(24, 48, dtype="float64")
+        star = star_3d(10, 12, 16)
+        hdiff = hdiff_program(24, 32)
+        hdiff_workers = (2, 4, 8)
+    else:
+        heat = heat_2d(48, 96, dtype="float64")
+        star = star_3d(16, 24, 32)
+        hdiff = hdiff_program(48, 64)
+        hdiff_workers = (2, 4, 8, 16)
+
+    targets = {
+        "heat2d": dict(
+            target=heat, workload_timesteps=2,
+            options=SpaceOptions(
+                temporal=(1, 2), capacities=("auto", "unbounded"),
+                tiles=(None,) + tuple(
+                    t for t in tile_candidates(heat, (2048, 8192))
+                    if t is not None),
+                fabrics=(mesh16,), place_seeds=(0, 1))),
+        "star_3d": dict(
+            target=star, workload_timesteps=1,
+            options=SpaceOptions(
+                workers=(1, 2, 4, 8), capacities=("auto",),
+                fabrics=(mesh16,), place_seeds=(0,))),
+        "hdiff": dict(
+            target=hdiff, workload_timesteps=1,
+            options=SpaceOptions(
+                workers=hdiff_workers, capacities=("auto", "unbounded"),
+                fabrics=(mesh16,), place_seeds=(0,))),
+    }
+
+    cases = {}
+    for name, cfg in targets.items():
+        if case and name != case:
+            continue
+        cache = EvalCache(cache_path) if cache_path else None
+        res = explore(cfg["target"], CGRA, options=cfg["options"],
+                      budget=Budget(routed_finalists=4),
+                      workload_timesteps=cfg["workload_timesteps"],
+                      cache=cache, verify=True)
+        # the artifact's two hard claims, enforced at refresh time:
+        assert_non_dominated(res.front, key=EvalPoint.objectives)
+        best, analytic = res.best(), res.analytic
+        assert analytic is not None, f"{name}: analytical baseline unmeasured"
+        assert best.cycles <= analytic.cycles, (
+            f"{name}: tuner best {best.cycles} cycles worse than analytical "
+            f"{analytic.cycles}")
+        cases[name] = {
+            **{k: v for k, v in res.to_json().items() if k != "failures"},
+            "n_failures": len(res.failures),
+            "margin_pct": round(
+                100.0 * (analytic.cycles - best.cycles) / analytic.cycles, 2),
+        }
+    return cases
+
+
 def _write_snapshot(path: str, schema: str, smoke: bool, case: str | None,
                     cases: dict, **extra) -> None:
     """Shared artifact writer.  A ``--case`` filter that matches nothing in
@@ -336,6 +411,18 @@ def write_engine_artifact(path: str, smoke: bool,
               "case is vector-only"))
 
 
+def write_explore_artifact(path: str, smoke: bool,
+                           case: str | None = None) -> None:
+    _write_snapshot(
+        path, "bench_pr5/v1", smoke, case,
+        explore_artifact_cases(smoke, case, cache_path=f"{path}.cache"),
+        note=("mapping auto-tuner (repro.explore) Pareto fronts over "
+              "(cycles, PEs, max channel load) vs the analytical §VI "
+              "worker choice; fronts verified non-dominated and best <= "
+              "analytical cycles at refresh time; evals cached in "
+              "<artifact>.cache"))
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--artifact", metavar="PATH",
@@ -344,6 +431,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="write the program-pipeline snapshot to PATH")
     ap.add_argument("--engine-artifact", metavar="PATH",
                     help="write the interp-vs-vector engine snapshot to PATH")
+    ap.add_argument("--explore", metavar="PATH", nargs="?",
+                    const="BENCH_pr5.json", default=None,
+                    help="run the mapping auto-tuner (repro.explore) on "
+                    "heat2d/star_3d/hdiff and write the Pareto-front "
+                    "snapshot (default PATH: BENCH_pr5.json)")
     ap.add_argument("--engine", choices=("interp", "vector", "both"),
                     default="interp",
                     help="simulation backend for the pr2/pr3 artifacts; "
@@ -356,7 +448,7 @@ def main(argv: list[str] | None = None) -> None:
                     help="skip the CSV benchmark modules (needs an artifact)")
     args = ap.parse_args(argv)
     any_artifact = (args.artifact or args.program_artifact
-                    or args.engine_artifact)
+                    or args.engine_artifact or args.explore)
     if args.artifact_only and not any_artifact:
         ap.error("--artifact-only requires --artifact/--program-artifact/"
                  "--engine-artifact")
@@ -390,6 +482,12 @@ def main(argv: list[str] | None = None) -> None:
     if args.engine_artifact:
         try:
             write_engine_artifact(args.engine_artifact, args.smoke, args.case)
+        except Exception:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+    if args.explore:
+        try:
+            write_explore_artifact(args.explore, args.smoke, args.case)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)

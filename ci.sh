@@ -1,16 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 verify gate (see ROADMAP.md) — one command for CI and local use.
 # Runs the test suite (includes the interp-vs-vector engine cross-validation
-# in tests/test_engine.py), then refreshes the perf-trajectory artifacts
-# (BENCH_pr2.json single-op mappings, BENCH_pr3.json program pipelines,
-# BENCH_pr4.json interpreter-vs-vector engine comparison) in the fast smoke
-# configuration.  --engine both makes the pr2/pr3 refresh itself a drift
-# gate: it fails if the vector engine's cycles/fires/outputs diverge from
-# the interpreter's.
+# in tests/test_engine.py; the property sweep runs under hypothesis when
+# installed — see requirements-dev.txt — and under the in-tree
+# repro.testing.minihyp shim otherwise, so it never skips), then refreshes
+# the perf-trajectory artifacts (BENCH_pr2.json single-op mappings,
+# BENCH_pr3.json program pipelines, BENCH_pr4.json interpreter-vs-vector
+# engine comparison, BENCH_pr5.json mapping auto-tuner Pareto fronts) in
+# the fast smoke configuration.  --engine both makes the pr2/pr3 refresh
+# itself a drift gate: it fails if the vector engine's cycles/fires/outputs
+# diverge from the interpreter's; the pr5 refresh asserts every front is
+# non-dominated and the tuner's best never loses to the analytical §VI
+# baseline (tuner evals cache in BENCH_pr5.json.cache, so reruns are cheap).
 set -euo pipefail
 cd "$(dirname "$0")"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --artifact BENCH_pr2.json \
     --program-artifact BENCH_pr3.json --engine-artifact BENCH_pr4.json \
+    --explore BENCH_pr5.json \
     --engine both --smoke --artifact-only

@@ -101,6 +101,17 @@ class DFG:
         return e
 
     # ----- compile hooks (repro.core.engine) ---------------------------------
+    @property
+    def version(self) -> int:
+        """Monotone mutation counter — compiled tables key on it so stale
+        compiles are detected (see ``repro.core.engine.compile``)."""
+        return self._version
+
+    def mark_mutated(self) -> None:
+        """Record an out-of-band mutation (e.g. edge-capacity rewrites by
+        ``apply_min_capacities``) so cached compiled plans invalidate."""
+        self._version += 1
+
     def finalize(self) -> list[Edge]:
         """Assign dense ``Edge.eid`` ids (producer order, then port order) and
         return the edge list.  Idempotent until the graph is mutated again;

@@ -8,6 +8,8 @@ compiles the DFG once into struct-of-arrays tables
 vectorized numpy passes (:mod:`repro.core.engine.vector`).
 """
 from repro.core.engine.common import RawStats, SimDeadlock
-from repro.core.engine.compile import CompiledPlan, compile_plan
+from repro.core.engine.compile import (CompiledPlan, StaleCompiledPlanError,
+                                       compile_plan, compiled_for)
 
-__all__ = ["RawStats", "SimDeadlock", "CompiledPlan", "compile_plan"]
+__all__ = ["RawStats", "SimDeadlock", "CompiledPlan",
+           "StaleCompiledPlanError", "compile_plan", "compiled_for"]

@@ -14,7 +14,15 @@ import dataclasses
 
 
 class SimDeadlock(RuntimeError):
-    pass
+    """Raised on deadlock or a ``max_cycles`` overrun.  ``cycles`` carries
+    how many cycles were simulated before giving up (budget accounting in
+    ``repro.explore``); ``timed_out`` distinguishes the overrun case."""
+
+    def __init__(self, msg: str, *, cycles: int = 0,
+                 timed_out: bool = False):
+        super().__init__(msg)
+        self.cycles = cycles
+        self.timed_out = timed_out
 
 
 @dataclasses.dataclass

@@ -46,6 +46,11 @@ LIN_OPS = ("mul", "mac", "add", "copy", "mux", "demux")
 SLOT_BITS = 44            # link booking key = (link id << SLOT_BITS) | slot
 
 
+class StaleCompiledPlanError(RuntimeError):
+    """The plan's DFG (topology or queue capacities) changed after
+    ``compile_plan()``; the compiled tables no longer describe it."""
+
+
 def _keep_array(nd: Node, T: int) -> np.ndarray:
     """``keep(s)`` for every stream position ``s < T``, vectorized when the
     mapper attached compiled pattern params (callable fallback otherwise)."""
@@ -177,6 +182,51 @@ class CompiledPlan:
     bidx: np.ndarray = None              # nid -> index into its kind bucket
     out_py: list = None                  # nid -> [out eids] (python ints)
     net: CompiledNetwork | None = None
+    # staleness tracking: the DFG mutation counter and queue-capacity
+    # signature observed at compile time (see compiled_for / is_current)
+    dfg_version: int = -1
+    cap_sig: tuple = ()
+
+    def is_current(self) -> bool:
+        """Do the compiled tables still describe the plan's DFG?  False after
+        any graph mutation — including capacity rewrites applied *without*
+        ``DFG.mark_mutated()`` (the capacity signature catches those)."""
+        return (self.g.version == self.dfg_version
+                and _cap_signature(self.edges) == self.cap_sig)
+
+    def require_current(self) -> "CompiledPlan":
+        if not self.is_current():
+            raise StaleCompiledPlanError(
+                f"compiled tables for DFG {self.g.name!r} are stale "
+                f"(compiled at version {self.dfg_version}, graph now at "
+                f"{self.g.version} or queue capacities changed); recompile "
+                f"with compile_plan()/compiled_for() after mutating a plan")
+        return self
+
+
+def _cap_signature(edges) -> tuple:
+    return tuple(e.capacity for e in edges)
+
+
+def compiled_for(plan, fabric: "RoutedFabric | None" = None) -> CompiledPlan:
+    """Compile-once cache: return the plan's cached :class:`CompiledPlan`
+    for ``fabric``, recompiling when the DFG mutated since (new nodes/edges,
+    or queue capacities rewritten by ``apply_min_capacities`` — the
+    compile-then-mutate hazard).  The cache lives on the plan object, one
+    entry per fabric identity (``None`` = ideal mode)."""
+    cache = getattr(plan, "_compiled_cache", None)
+    if cache is None:
+        cache = {}
+        plan._compiled_cache = cache
+    key = id(fabric) if fabric is not None else None
+    ent = cache.get(key)
+    if ent is not None:
+        cached_fabric, cp = ent
+        if cached_fabric is fabric and cp.is_current():
+            return cp
+    cp = compile_plan(plan, fabric)
+    cache[key] = (fabric, cp)
+    return cp
 
 
 def compile_network(g: DFG, fabric: "RoutedFabric") -> CompiledNetwork:
@@ -404,5 +454,6 @@ def compile_plan(plan, fabric: "RoutedFabric | None" = None) -> CompiledPlan:
         imux_ids=arr64(imux_ids), imux_pat=imux_pat,
         imux_port_eids=imux_port_eids, imux_sel0=arr64(imux_sel0),
         kind_of=kind_of, bidx=bidx, out_py=out_py,
-        net=compile_network(g, fabric) if fabric is not None else None)
+        net=compile_network(g, fabric) if fabric is not None else None,
+        dfg_version=g.version, cap_sig=_cap_signature(edges))
     return cp

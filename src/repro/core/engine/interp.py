@@ -149,7 +149,8 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
     out_free = [False] * n_ids
     while not finished:
         if cycles >= max_cycles:
-            raise SimDeadlock(f"exceeded max_cycles={max_cycles}")
+            raise SimDeadlock(f"exceeded max_cycles={max_cycles}",
+                              cycles=cycles, timed_out=True)
         cycles += 1
         credit = min(credit + elems_per_cycle, 4 * elems_per_cycle)
         if net is not None:
@@ -275,7 +276,7 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
         if not any_fired and not finished:
             if net is not None and net.in_flight():
                 continue                 # tokens still riding the network
-            raise SimDeadlock(deadlock_message(cycles, nodes))
+            raise SimDeadlock(deadlock_message(cycles, nodes), cycles=cycles)
 
     return RawStats(
         cycles=cycles, flops=flops, loads=loads, stores=stores, fires=fires,

@@ -50,7 +50,8 @@ import numpy as np
 from repro.core.engine.common import RawStats, SimDeadlock
 from repro.core.engine.compile import (CompiledPlan, K_ADDR, K_CMP, K_FLT,
                                        K_LIN, K_LOAD, K_STORE, K_SYNC,
-                                       SLOT_BITS, UNBOUNDED, compile_plan)
+                                       SLOT_BITS, UNBOUNDED, compile_plan,
+                                       compiled_for)
 
 _BIG = 1 << 60
 _SPARSE_MAX = 96          # eligible-node count at or below which the scalar
@@ -132,9 +133,15 @@ class _Rings:
 def run(plan, flat_in, flat_out, elems_per_cycle: float,
         max_cycles: int = 50_000_000, fabric=None) -> RawStats:
     """Compile ``plan`` (+ routes) and run the vectorized cycle loop;
-    mutates ``flat_out`` in place.  Results match ``engine.interp`` exactly."""
-    cp = compile_plan(plan, fabric)
-    return _run_compiled(cp, flat_in, flat_out, elems_per_cycle, max_cycles)
+    mutates ``flat_out`` in place.  Results match ``engine.interp`` exactly.
+
+    Compiles are cached on the plan (``compiled_for``): re-simulating the
+    same plan skips the flatten, and a plan mutated after compilation —
+    ``apply_min_capacities`` after a prior run, the auto-tuner's recapacity
+    path — transparently recompiles instead of using stale tables."""
+    cp = compiled_for(plan, fabric)
+    return _run_compiled(cp.require_current(), flat_in, flat_out,
+                         elems_per_cycle, max_cycles)
 
 
 def _deadlock_msg(cp: CompiledPlan, rings: _Rings, cycles: int) -> str:
@@ -401,7 +408,8 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
 
     while not finished:
         if cycles >= max_cycles:
-            raise SimDeadlock(f"exceeded max_cycles={max_cycles}")
+            raise SimDeadlock(f"exceeded max_cycles={max_cycles}",
+                              cycles=cycles, timed_out=True)
         cycles += 1
         credit = min(credit + elems_per_cycle, cap4)
 
@@ -729,7 +737,7 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
 
         if not any_fired and not finished:
             if net is None or not arr_heap:
-                raise SimDeadlock(_deadlock_msg(cp, rings, cycles))
+                raise SimDeadlock(_deadlock_msg(cp, rings, cycles), cycles=cycles)
             # event skip: state is static until the next arrival (or the
             # memory credit crossing 1.0) — fast-forward to it.
             nxt = arr_heap[0]

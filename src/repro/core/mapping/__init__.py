@@ -20,7 +20,8 @@ per axis — see :mod:`~repro.core.mapping.stages` — and ``plan_blocks``
 (:mod:`~repro.core.mapping.blocks`) strip-mines grids whose innermost extent
 does not divide by ``w``.
 """
-from repro.core.mapping.blocks import BlockPlan, plan_blocks
+from repro.core.mapping.blocks import (BlockPlan, minimal_working_set_bytes,
+                                       plan_blocks)
 from repro.core.mapping.nd import (apply_min_capacities, map_1d, map_2d,
                                    map_3d, map_nd)
 from repro.core.mapping.plan import MappingPlan
@@ -31,7 +32,8 @@ from repro.core.mapping.stages import (AddTree, ReaderBank, SyncTree,
                                        row_tokens)
 from repro.core.mapping.streams import KeepMask, StreamSpec, band_keep
 
-__all__ = ["BlockPlan", "plan_blocks", "apply_min_capacities", "map_1d",
+__all__ = ["BlockPlan", "plan_blocks", "minimal_working_set_bytes",
+           "apply_min_capacities", "map_1d",
            "map_2d", "map_3d", "map_nd", "MappingPlan", "AddTree",
            "ReaderBank", "SyncTree", "TapChain", "WorkerStream", "WriterBank",
            "compute_layer", "layer_stream", "owning_stream", "reader_stream",

@@ -21,6 +21,13 @@ class BlockPlan:
         return self.working_set_bytes <= self.storage_budget_bytes
 
 
+def minimal_working_set_bytes(spec: StencilSpec) -> int:
+    """Working set of the smallest possible block, ``(1, …, 1)`` — the hard
+    floor any storage budget must clear for this spec."""
+    halo = tuple(r * spec.timesteps for r in spec.radii)
+    return (math.prod(1 + 2 * h for h in halo) + 1) * spec.bytes_per_elem
+
+
 def plan_blocks(spec: StencilSpec, storage_budget_bytes: int,
                 lane_multiple: int = 128) -> BlockPlan:
     """Choose per-axis block sizes so (block + 2*halo) working sets fit the
@@ -28,7 +35,16 @@ def plan_blocks(spec: StencilSpec, storage_budget_bytes: int,
 
     Strategy (paper: vertical strips sized so ``2*ry*block_size`` fits):
     keep the innermost axis in lane_multiple chunks as large as possible,
-    then grow outer axes.
+    then grow outer axes.  If even the seed block overshoots a tight budget,
+    the block *shrinks* toward ``(1, …, 1)`` — outer axes first, so the
+    innermost axis keeps its lane alignment as long as possible — and a
+    budget below the ``(1, …, 1)`` working set raises ``ValueError`` (the
+    returned plan always has ``fits == True``).
+
+    Raises:
+      ValueError: when the halo-inclusive working set of a ``(1, …, 1)``
+        block already exceeds ``storage_budget_bytes`` (the message carries
+        the computed minimal working set).
     """
     halo = tuple(r * spec.timesteps for r in spec.radii)
     b = spec.bytes_per_elem
@@ -39,6 +55,25 @@ def plan_blocks(spec: StencilSpec, storage_budget_bytes: int,
     def ws(blk):  # in + out working set with halos
         inner = math.prod(bb + 2 * h for bb, h in zip(blk, halo))
         return (inner + math.prod(blk)) * b
+
+    minimal = minimal_working_set_bytes(spec)
+    if minimal > storage_budget_bytes:
+        raise ValueError(
+            f"storage budget {storage_budget_bytes} B cannot hold even a "
+            f"(1, …, 1) block of {spec.grid_shape} (radii {spec.radii}, "
+            f"timesteps {spec.timesteps}): minimal halo-inclusive working "
+            f"set is {minimal} B")
+
+    # shrink toward (1, …, 1) when the seed block overshoots: outer axes
+    # halve first (innermost keeps its lane alignment while any outer axis
+    # can still give ground — the seed never exceeds one lane chunk), then
+    # the innermost halves too.
+    while ws(block) > storage_budget_bytes:
+        outer = [ax for ax in range(spec.ndim - 1) if block[ax] > 1]
+        if outer:
+            block[max(outer, key=lambda a: block[a])] //= 2
+        else:   # block[-1] > 1 is guaranteed: the (1, …, 1) floor fits
+            block[-1] //= 2
 
     # grow innermost first, then outer axes round-robin
     order = list(range(spec.ndim - 1, -1, -1))

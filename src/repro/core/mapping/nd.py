@@ -104,12 +104,17 @@ def map_nd(spec: StencilSpec, workers: int, queue_capacity: int | None = None,
 def apply_min_capacities(g: DFG, min_caps: dict[int, int]) -> None:
     """Set every queue to its analytic minimum (default 4 when no bound was
     derived) — the ``auto_capacity=True`` policy, shared with program-graph
-    lowering (:mod:`repro.program.lower`)."""
+    lowering (:mod:`repro.program.lower`).
+
+    Bumps the graph's mutation counter so any compiled tables built *before*
+    the recapacity (``repro.core.engine.compile``) invalidate instead of
+    silently simulating with the stale capacities."""
     for e in g.edges():
         if id(e) in min_caps:
             e.capacity = min_caps[id(e)]
         elif e.capacity is None:
             e.capacity = 4
+    g.mark_mutated()
 
 
 # ---------------------------------------------------------------------------

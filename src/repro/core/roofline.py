@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 
 from repro.core.spec import StencilSpec
 
@@ -63,22 +64,51 @@ class RooflineReport:
     workers: int                  # w* chosen
     worker_demand_gflops: float   # flops the chosen workers can execute
     macs_per_worker: int
+    capped: bool = False          # w* silently hit the physical-fit ceiling
+    workers_demanded: int = 0     # BW-limited demand before the fit cap
 
     @property
     def ridge_ai(self) -> float:
         return self.compute_bound_gflops / (self.bw_bound_gflops / self.arithmetic_intensity)
 
 
-def select_workers(spec: StencilSpec, machine: Machine) -> int:
-    """Paper §VI: fit Y/#MACs_per_worker workers; use the fewest that satisfy
-    the BW-limited flop demand, capped by what physically fits."""
+def worker_fit(spec: StencilSpec, machine: Machine) -> int:
+    """How many workers physically fit: ``#MACs / MACs_per_worker``."""
     mpw = spec.macs_per_worker
-    fit = max(1, machine.num_macs // mpw) if machine.num_macs else 1
+    return max(1, machine.num_macs // mpw) if machine.num_macs else 1
+
+
+def workers_demanded(spec: StencilSpec, machine: Machine) -> int:
+    """The BW-limited worker demand *before* any physical-fit cap: the
+    fewest workers whose flop rate covers ``BW * AI``."""
+    mpw = spec.macs_per_worker
     ai = spec.arithmetic_intensity()
     bw_gflops = machine.bw_gbps * ai
     per_worker = (2 * (mpw - 1) + 1) * machine.clock_ghz  # 2r MACs + 1 MUL per cycle
-    need = max(1, math.ceil(bw_gflops / per_worker))
-    return min(fit, need) if machine.num_macs else need
+    return max(1, math.ceil(bw_gflops / per_worker))
+
+
+def select_workers(spec: StencilSpec, machine: Machine) -> int:
+    """Paper §VI: fit Y/#MACs_per_worker workers; use the fewest that satisfy
+    the BW-limited flop demand, capped by what physically fits.
+
+    When the cap binds (the machine cannot host the demanded workers) a
+    ``RuntimeWarning`` is emitted — callers wanting the cap programmatically
+    should use :func:`analyze` and read ``RooflineReport.capped`` /
+    ``RooflineReport.workers_demanded``.
+    """
+    need = workers_demanded(spec, machine)
+    if not machine.num_macs:
+        return need
+    fit = worker_fit(spec, machine)
+    if need > fit:
+        warnings.warn(
+            f"select_workers: bandwidth-limited demand of {need} workers "
+            f"exceeds the {fit} that physically fit on {machine.name} "
+            f"({machine.num_macs} MACs / {spec.macs_per_worker} per worker);"
+            f" capping at {fit} leaves the memory system unsaturated",
+            RuntimeWarning, stacklevel=2)
+    return min(fit, need)
 
 
 def worker_demand_gflops(spec: StencilSpec, machine: Machine, w: int) -> float:
@@ -92,7 +122,13 @@ def analyze(spec: StencilSpec, machine: Machine, workers: int | None = None) -> 
           else spec.arithmetic_intensity())
     bw_bound = machine.bw_gbps * ai
     achievable = min(bw_bound, machine.peak_gflops)
-    w = workers if workers is not None else select_workers(spec, machine)
+    need = workers_demanded(spec, machine)
+    fit = worker_fit(spec, machine)
+    # same arithmetic as select_workers, without re-warning: the report
+    # *records* the cap instead (capped only describes the selection path —
+    # an explicitly-passed worker count was chosen, not capped)
+    w = workers if workers is not None else (
+        min(fit, need) if machine.num_macs else need)
     return RooflineReport(
         machine=machine.name,
         arithmetic_intensity=ai,
@@ -103,6 +139,8 @@ def analyze(spec: StencilSpec, machine: Machine, workers: int | None = None) -> 
         workers=w,
         worker_demand_gflops=worker_demand_gflops(spec, machine, w),
         macs_per_worker=spec.macs_per_worker,
+        capped=workers is None and bool(machine.num_macs) and need > fit,
+        workers_demanded=need,
     )
 
 

@@ -1,0 +1,301 @@
+"""Budgeted design-space search: enumerate → prune → measure → Pareto.
+
+The measured half of the tuner.  Stage 1 simulates every pruned-in config in
+*ideal* mode (no network) with the compiled vector engine — fast enough that
+a whole worker/temporal/capacity/tiling lattice costs less than one routed
+interp run used to.  Stage 2 takes the stage-1 Pareto finalists (plus,
+always, the paper's analytical baseline) and pays for physics: seeded
+placement (optionally restarted), XY routing, and network-aware simulation
+per candidate fabric, producing the final objective vectors
+
+    (workload cycles, PEs used, max channel load).
+
+Every simulate() call is budgeted (``Budget.max_evals`` /
+``Budget.max_sim_cycles``) and cached by canonical config hash
+(:mod:`repro.explore.cache`), failures included — a config known to
+deadlock is never paid for twice.  The analytical config is evaluated
+first, so even a one-eval budget yields the baseline, and the best()
+pick can only match or beat it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.engine.common import SimDeadlock
+from repro.core.roofline import Machine
+from repro.core.simulator import simulate
+from repro.explore.cache import EvalCache
+from repro.explore.pareto import best_point, pareto_front
+from repro.explore.prune import PruneLog, fits_fabric, prune_space
+from repro.explore.space import (MappingConfig, SpaceOptions, as_target,
+                                 enumerate_space)
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """What the measured stage may spend.  ``None`` = unlimited."""
+    max_evals: int | None = None          # simulate() calls (cache hits free)
+    max_sim_cycles: int | None = None     # summed simulated cycles
+    routed_finalists: int = 4             # stage-1 survivors that get routed
+    sim_max_cycles: int = 5_000_000       # per-simulation runaway guard
+
+
+@dataclasses.dataclass
+class EvalPoint:
+    """One measured mapping: config + objective vector + provenance."""
+    config: MappingConfig
+    cycles: int                           # workload cycles (sim x repeats)
+    pes: int                              # instructions (ideal) / PEs (routed)
+    max_channel_load: int                 # 0 in ideal mode
+    gflops: float
+    routed: bool
+    cached: bool = False
+    sim_cycles: int = 0                   # raw cycles of the simulate() call
+
+    def objectives(self) -> tuple[int, int, int]:
+        return (self.cycles, self.pes, self.max_channel_load)
+
+    def as_dict(self) -> dict:
+        return {"config": self.config.canonical(),
+                "cycles": self.cycles, "pes": self.pes,
+                "max_channel_load": self.max_channel_load,
+                "gflops": round(self.gflops, 3), "routed": self.routed,
+                "cached": self.cached}
+
+
+@dataclasses.dataclass
+class ExploreResult:
+    target: str
+    machine: str
+    points: list[EvalPoint]               # final-mode measurements
+    ideal_points: list[EvalPoint]
+    front: list[EvalPoint]
+    analytic: EvalPoint | None            # the paper's §VI baseline, measured
+    analytic_config: MappingConfig
+    failures: list[dict]
+    prune: PruneLog
+    stats: dict
+
+    def best(self) -> EvalPoint:
+        return best_point(self.front, key=EvalPoint.objectives)
+
+    def to_json(self) -> dict:
+        best = self.best() if self.front else None
+        return {
+            "target": self.target, "machine": self.machine,
+            "analytic": self.analytic.as_dict() if self.analytic else None,
+            "best": best.as_dict() if best else None,
+            "front": [p.as_dict() for p in self.front],
+            "n_points": len(self.points),
+            "failures": self.failures,
+            "pruned": self.prune.as_dict(),
+            "stats": self.stats,
+        }
+
+
+class _BudgetState:
+    def __init__(self, budget: Budget):
+        self.budget = budget
+        self.evals = 0
+        self.sim_cycles = 0
+
+    def exhausted(self) -> bool:
+        b = self.budget
+        return ((b.max_evals is not None and self.evals >= b.max_evals)
+                or (b.max_sim_cycles is not None
+                    and self.sim_cycles >= b.max_sim_cycles))
+
+    def charge(self, cycles: int) -> None:
+        self.evals += 1
+        self.sim_cycles += cycles
+
+
+def _machine_sig(machine: Machine) -> dict:
+    return {"name": machine.name, "clock_ghz": machine.clock_ghz,
+            "num_macs": machine.num_macs, "bw_gbps": machine.bw_gbps,
+            "peak_gflops": machine.peak_gflops}
+
+
+def _mk_topo(fabric: tuple[int, int, str]):
+    from repro.fabric import FabricTopology
+    rows, cols, kind = fabric
+    if kind == "torus":
+        return FabricTopology.torus_grid(rows, cols)
+    return FabricTopology.mesh(rows, cols)
+
+
+def _point_from_cache(cfg: MappingConfig, ent: dict,
+                      routed: bool) -> EvalPoint:
+    return EvalPoint(config=cfg, cycles=ent["cycles"], pes=ent["pes"],
+                     max_channel_load=ent["chan"], gflops=ent["gflops"],
+                     routed=routed, cached=True,
+                     sim_cycles=ent["sim_cycles"])
+
+
+def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
+              cache: EvalCache, state: _BudgetState, engine: str,
+              failures: list, skipped: list, verify: bool,
+              routed: bool) -> EvalPoint | None:
+    """One (possibly cached) measurement; None on failure/budget-skip."""
+    key = cfg.key(scope, ideal=not routed)
+    ent = cache.get(key)
+    if ent is not None:
+        if "failed" in ent:
+            failures.append({"config": cfg.canonical(),
+                             "reason": ent["failed"], "cached": True})
+            return None
+        return _point_from_cache(cfg, ent, routed)
+    if state.exhausted():
+        skipped.append(cfg)
+        return None
+
+    def fail(reason: str) -> None:
+        failures.append({"config": cfg.canonical(), "reason": reason,
+                         "cached": False})
+        cache.put(key, {"failed": reason})
+
+    try:
+        plan = target.build(cfg)
+    except ValueError as e:
+        fail(f"build: {e}")
+        return None
+
+    rf = placement = None
+    if routed:
+        topo = _mk_topo(cfg.fabric)
+        reason = fits_fabric(plan, topo)
+        if reason is not None:
+            fail(reason)
+            return None
+        from repro.fabric import PlacementError, RouteError, place, route
+        try:
+            placement = place(plan, topo, seed=cfg.place_seed,
+                              restarts=cfg.place_restarts)
+            rf = route(placement)
+        except (PlacementError, RouteError) as e:
+            fail(f"place/route: {e}")
+            return None
+
+    x = target.make_input(plan)
+    try:
+        res = simulate(plan, x, machine, engine=engine, fabric=rf,
+                       max_cycles=state.budget.sim_max_cycles)
+    except SimDeadlock as e:
+        state.charge(e.cycles)            # the cycles burnt before giving up
+        fail(f"{'timeout' if e.timed_out else 'deadlock'}: {e}")
+        return None
+    state.charge(res.cycles)
+    if verify:
+        target.verify(plan, cfg, x, res)
+
+    pt = EvalPoint(
+        config=cfg,
+        cycles=res.cycles * target.repeats(cfg),
+        pes=placement.pes_used() if placement is not None
+        else len(plan.dfg.nodes),
+        max_channel_load=(rf.stats()["max_channel_load"]
+                          if rf is not None else 0),
+        gflops=res.gflops, routed=routed, sim_cycles=res.cycles)
+    cache.put(key, {"cycles": pt.cycles, "pes": pt.pes,
+                    "chan": pt.max_channel_load, "gflops": pt.gflops,
+                    "sim_cycles": pt.sim_cycles})
+    return pt
+
+
+def explore(target, machine: Machine, *,
+            options: SpaceOptions | None = None,
+            budget: Budget | None = None,
+            cache: EvalCache | str | None = None,
+            engine: str = "vector",
+            workload_timesteps: int = 1,
+            verify: bool = False) -> ExploreResult:
+    """Search mapping configs for ``target`` (a ``StencilSpec``, a
+    ``StencilProgram``, or a ready-made target) on ``machine`` and return
+    the measured Pareto front.  See the module docstring for the staging;
+    ``docs/explore.md`` for the full semantics."""
+    t0 = time.perf_counter()
+    target = as_target(target, workload_timesteps=workload_timesteps)
+    options = options or SpaceOptions()
+    budget = budget or Budget()
+    if not isinstance(cache, EvalCache):
+        cache = EvalCache(cache)
+
+    configs, analytic_cfg = enumerate_space(target, machine, options)
+    kept, plog = prune_space(target, machine, configs, options,
+                             keep=analytic_cfg)
+    # analytical baseline first: even a one-eval budget measures it
+    kept.sort(key=lambda c: c != analytic_cfg)
+
+    state = _BudgetState(budget)
+    failures: list[dict] = []
+    skipped: list[MappingConfig] = []
+    # sim_max_cycles is part of the scope: a timeout under a small budget
+    # must not be replayed from cache as a failure under a bigger one
+    base_scope = {"target": target.signature(),
+                  "machine": _machine_sig(machine), "engine": engine,
+                  "sim_max_cycles": budget.sim_max_cycles}
+
+    # ----- stage 1: ideal-mode sweep ----------------------------------------
+    scope = {**base_scope, "mode": "ideal"}
+    ideal_points = []
+    for cfg in kept:
+        pt = _evaluate(target, cfg, machine, scope=scope, cache=cache,
+                       state=state, engine=engine, failures=failures,
+                       skipped=skipped, verify=verify, routed=False)
+        if pt is not None:
+            ideal_points.append(pt)
+
+    analytic_pt = next((p for p in ideal_points
+                        if p.config == analytic_cfg), None)
+
+    # ----- stage 2: route the finalists -------------------------------------
+    points = ideal_points
+    if options.fabrics and ideal_points:
+        finalists = pareto_front(ideal_points, key=EvalPoint.objectives)
+        finalists = sorted(finalists, key=EvalPoint.objectives)
+        finalists = finalists[:max(1, budget.routed_finalists)]
+        if analytic_pt is not None and analytic_pt not in finalists:
+            finalists.append(analytic_pt)
+        scope = {**base_scope, "mode": "routed"}
+        routed_points = []
+        for pt in finalists:
+            for fab in options.fabrics:
+                for seed in options.place_seeds:
+                    cfg = pt.config.with_fabric(fab, seed,
+                                                options.place_restarts)
+                    rpt = _evaluate(target, cfg, machine, scope=scope,
+                                    cache=cache, state=state, engine=engine,
+                                    failures=failures, skipped=skipped,
+                                    verify=False, routed=True)
+                    if rpt is not None:
+                        routed_points.append(rpt)
+        points = routed_points
+        # the baseline must be measured in the SAME mode as the points it
+        # anchors: if its routed eval failed there is no baseline (None),
+        # never the ideal-mode stand-in (routed >= ideal would skew margins)
+        analytic_pt = next(
+            (p for p in routed_points
+             if p.config.fabric == options.fabrics[0]
+             and p.config.place_seed == options.place_seeds[0]
+             and dataclasses.replace(p.config, fabric=None, place_seed=0,
+                                     place_restarts=1) == analytic_cfg),
+            None)
+
+    front = pareto_front(points, key=EvalPoint.objectives)
+    cache.save()
+    stats = {
+        "n_configs": len(configs), "n_pruned": len(plog.dropped),
+        "n_kept": len(kept), "n_measured": state.evals,
+        "n_cached": cache.hits, "n_failures": len(failures),
+        "n_budget_skipped": len(skipped),
+        "sim_cycles_total": state.sim_cycles,
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+    return ExploreResult(
+        target=target.name, machine=machine.name, points=points,
+        ideal_points=ideal_points, front=front, analytic=analytic_pt,
+        analytic_config=analytic_cfg, failures=failures, prune=plog,
+        stats=stats)

@@ -120,8 +120,24 @@ def _snake(topo: FabricTopology) -> list[Coord]:
 
 
 def place(plan: MappingPlan, topo: FabricTopology, *, seed: int = 0,
-          anneal_iters: int | None = None) -> Placement:
-    """Place every DFG node on a capability-compatible PE slot."""
+          anneal_iters: int | None = None, restarts: int = 1) -> Placement:
+    """Place every DFG node on a capability-compatible PE slot.
+
+    ``restarts > 1`` runs the whole greedy-seed + annealing pipeline under
+    seeds ``seed, seed+1, …`` and keeps the placement with the lowest
+    weighted hop count — the restartable form the mapping auto-tuner
+    (``repro.explore``) uses to spend extra placement budget on finalists.
+    Deterministic for a fixed ``(seed, restarts)``; ``restarts=1`` is
+    bit-identical to the previous single-shot behaviour."""
+    if restarts < 1:
+        raise ValueError("restarts must be >= 1")
+    if restarts > 1:
+        best = None
+        for s in range(seed, seed + restarts):
+            cand = place(plan, topo, seed=s, anneal_iters=anneal_iters)
+            if best is None or cand.weighted_hops() < best.weighted_hops():
+                best = cand
+        return best
     g = plan.dfg
     nodes = sorted(g.nodes, key=_seed_key)
     if len(nodes) > topo.total_slots():

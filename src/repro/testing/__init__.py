@@ -1,0 +1,6 @@
+"""Test-support utilities shipped with the library (no third-party deps).
+
+``repro.testing.minihyp`` is a minimal, deterministic stand-in for the
+`hypothesis` property-testing API so the tier-1 property sweep runs (rather
+than skips) in environments where ``hypothesis`` cannot be installed.
+"""

@@ -191,3 +191,23 @@ def test_route_directions_on_two_wide_mesh():
     torus = FabricTopology.torus_grid(4, 4)
     assert _direction(((0, 0), (0, 3)), torus) == "W"   # wrap west
     assert _direction(((0, 3), (0, 0)), torus) == "E"   # wrap east
+
+
+def test_place_restarts_never_worse_than_single_seed():
+    """Restartable placement (PR 5): best-of-N seeds can only improve the
+    weighted hop count over the N=1 run with the same base seed, and stays
+    deterministic."""
+    from repro.core import map_2d
+    from repro.core.spec import heat_2d
+    from repro.fabric import FabricTopology, place
+
+    spec = heat_2d(10, 16, dtype="float64")
+    topo = FabricTopology.mesh(10, 10)
+    single = place(map_2d(spec, workers=4), topo, seed=0)
+    multi = place(map_2d(spec, workers=4), topo, seed=0, restarts=3)
+    assert multi.weighted_hops() <= single.weighted_hops()
+    again = place(map_2d(spec, workers=4), topo, seed=0, restarts=3)
+    assert again.coords == multi.coords and again.seed == multi.seed
+    import pytest
+    with pytest.raises(ValueError):
+        place(map_2d(spec, workers=4), topo, restarts=0)

@@ -67,3 +67,45 @@ def test_fusion_crossover_exists():
     s1 = paper_stencil_1d()
     t = crossover_timesteps(s1, CGRA, workers=6)
     assert t == 3      # AI 2.06 -> needs ~3 fused steps to hit 614 GFLOPS
+
+
+# ---------------------------------------------------------------------------
+# PR 5 regression: the physical-fit cap in select_workers is recorded, not
+# silent — while the paper's pinned counts stay uncapped and warning-free.
+# ---------------------------------------------------------------------------
+def test_paper_worker_choices_are_uncapped():
+    import warnings
+
+    from repro.core.roofline import select_workers
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any RuntimeWarning -> failure
+        assert select_workers(paper_stencil_1d(), CGRA) == 6
+        assert select_workers(paper_stencil_2d(), CGRA) == 5
+    r1 = analyze(paper_stencil_1d(), CGRA)
+    r2 = analyze(paper_stencil_2d(), CGRA)
+    assert not r1.capped and r1.workers_demanded == 6
+    assert not r2.capped and r2.workers_demanded == 5
+
+
+def test_select_workers_cap_warns_and_reports():
+    """A machine too small for the bandwidth-limited demand must warn and
+    expose both the cap and the uncapped demand on the report."""
+    import dataclasses
+
+    import pytest
+
+    from repro.core.roofline import select_workers, workers_demanded
+
+    tiny = dataclasses.replace(CGRA, name="cgra_tiny", num_macs=64)
+    s = paper_stencil_2d()                    # 49 MACs/worker -> only 1 fits
+    need = workers_demanded(s, tiny)
+    assert need > 1
+    with pytest.warns(RuntimeWarning, match="exceeds the 1 that physically"):
+        w = select_workers(s, tiny)
+    assert w == 1
+    r = analyze(s, tiny)                      # analyze records, no warning
+    assert r.capped and r.workers == 1 and r.workers_demanded == need
+    # an explicitly-passed worker count is a choice, not a cap
+    r_explicit = analyze(s, tiny, workers=1)
+    assert not r_explicit.capped and r_explicit.workers_demanded == need

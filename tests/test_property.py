@@ -9,13 +9,21 @@ Mapping invariants (the paper's interleave/filter algebra):
   * reader streams partition the grid exactly
   * every filter's keep-window lies inside its reader stream
   * sync expectations sum to the interior size
+Explorer invariants (repro.explore):
+  * a Pareto front is internally non-dominated and covers its inputs
+  * the measured best never loses to any measured point on cycles
+
+Runs under real ``hypothesis`` when installed (preferred: shrinking, example
+database); otherwise under the deterministic shim
+:mod:`repro.testing.minihyp`, so the sweep never silently skips.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # containers where hypothesis can't be installed
+    from repro.testing.minihyp import given, settings, strategies as st
 
 from repro.core import CGRA, simulate
 from repro.core.mapping import map_1d, map_nd
@@ -226,3 +234,56 @@ def test_mapping_interleave_algebra(n, r, w):
         if nd.op == "filter":
             src_len = len(plan.reader_loads[0])  # streams differ by <=1
             assert nd.params["m"] + nd.params["n"] <= src_len + 1
+
+
+# ---------------------------------------------------------------------------
+# explorer invariants (PR 5: repro.explore)
+# ---------------------------------------------------------------------------
+@given(st.lists(st.tuples(st.integers(0, 40), st.integers(0, 40),
+                          st.integers(0, 40)), min_size=0, max_size=40))
+@settings(**SET)
+def test_pareto_front_sound_and_complete(points):
+    """The front is internally non-dominated, and every input point is
+    either on the front or dominated by a front member."""
+    from repro.explore import assert_non_dominated, dominates, pareto_front
+
+    front = pareto_front(points)
+    assert_non_dominated(front)
+    front_set = set(front)
+    for p in points:
+        assert p in front_set or any(dominates(f, p) for f in front)
+
+
+@st.composite
+def explore_case(draw):
+    """Tiny random 1D specs + a random worker ladder for the explorer."""
+    from repro.core.spec import StencilSpec
+
+    r = draw(st.integers(1, 2))
+    n = draw(st.integers(4 * r + 8, 4 * r + 40))
+    coeffs = tuple(
+        draw(st.lists(st.floats(-1, 1, allow_nan=False, width=32),
+                      min_size=2 * r + 1, max_size=2 * r + 1)))
+    spec = StencilSpec((n,), (r,), (coeffs,), dtype="float64")
+    workers = tuple(sorted({draw(st.integers(1, 4)) for _ in range(3)}))
+    return spec, workers
+
+
+@given(explore_case())
+@settings(max_examples=8, deadline=None)
+def test_explorer_front_non_dominated(case):
+    """Fuzz the whole tuner loop: the returned Pareto front must be
+    internally non-dominated and the best() pick must never lose to any
+    measured point on the leading (cycles) objective."""
+    from repro.core import CGRA
+    from repro.explore import (EvalPoint, SpaceOptions, assert_non_dominated,
+                               explore)
+
+    spec, workers = case
+    res = explore(spec, CGRA, options=SpaceOptions(workers=workers),
+                  verify=True)
+    assert res.front, "explorer returned an empty front"
+    assert_non_dominated(res.front, key=EvalPoint.objectives)
+    assert res.best().cycles == min(p.cycles for p in res.points)
+    if res.analytic is not None:
+        assert res.best().cycles <= res.analytic.cycles

@@ -6,7 +6,8 @@ import pytest
 from repro.core import CGRA, SimDeadlock, map_1d, map_2d, simulate
 from repro.core.mapping import plan_blocks
 from repro.core.reference import stencil_reference_np
-from repro.core.spec import StencilSpec, heat_2d, paper_stencil_1d
+from repro.core.spec import (StencilSpec, heat_2d, paper_stencil_1d,
+                             paper_stencil_2d)
 
 
 def _coeffs(rng, r):
@@ -180,3 +181,47 @@ def test_3d_oracle_supported(rng):
     want += sum(c * x[j[0], j[1], j[2] + k - 1] for k, c in enumerate(cx))
     assert abs(y[j] - want) < 1e-12
     assert y[0, 0, 0] == 0.0
+
+
+def test_block_planner_shrinks_to_fit_tight_budget():
+    """Regression (PR 5): a budget below the seed block's working set used
+    to silently return fits=False; now the block shrinks toward (1, ..., 1)
+    and the returned plan always fits."""
+    spec = heat_2d(512, 512, dtype="float32")
+    # seed block is (8, 128) + halos -> ~4.7 KB; force far below that
+    bp = plan_blocks(spec, storage_budget_bytes=600)
+    assert bp.fits
+    assert bp.working_set_bytes <= 600
+    assert all(b >= 1 for b in bp.block_shape)
+    assert all(g >= 1 for g in bp.grid)
+
+
+def test_block_planner_raises_below_minimal_working_set():
+    from repro.core.mapping import minimal_working_set_bytes
+
+    spec = paper_stencil_2d(ny=64, nx=128, r=12, dtype="float64")
+    minimal = minimal_working_set_bytes(spec)
+    with pytest.raises(ValueError) as ei:
+        plan_blocks(spec, storage_budget_bytes=minimal - 1)
+    assert str(minimal) in str(ei.value)     # message carries the floor
+
+
+def test_block_planner_exact_boundary_budget():
+    """A budget of exactly the (1, ..., 1) working set is satisfiable — the
+    planner must return that block, not raise or overshoot."""
+    from repro.core.mapping import minimal_working_set_bytes
+
+    spec = paper_stencil_2d(ny=64, nx=128, r=12, dtype="float64")
+    minimal = minimal_working_set_bytes(spec)
+    bp = plan_blocks(spec, storage_budget_bytes=minimal)
+    assert bp.fits and bp.working_set_bytes == minimal
+    assert bp.block_shape == (1, 1)
+
+
+def test_block_planner_1d_tight_budget():
+    spec = paper_stencil_1d(n=194400, rx=8, dtype="float64")
+    big = plan_blocks(spec, storage_budget_bytes=256 * 1024)
+    small = plan_blocks(spec, storage_budget_bytes=4 * 1024)
+    assert big.fits and small.fits
+    assert small.block_shape[0] < big.block_shape[0]
+    assert small.working_set_bytes <= 4 * 1024
