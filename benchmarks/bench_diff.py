@@ -1,0 +1,133 @@
+"""Compare two BENCH_*.json perf snapshots with per-kind tolerances.
+
+    python benchmarks/bench_diff.py OLD.json NEW.json [--rtol 0.25] ...
+
+The artifacts' deterministic counters (cycle counts, token hops, stall
+cycles, fire/instruction counts — anything integer-valued) must match
+**exactly**: the simulator is bit-reproducible, so any drift there is a
+semantics change, not noise.  Float-valued keys (wall times, GFLOPS,
+speedups) are machine-load measurements and compare under ``--rtol``/
+``--atol``.  ``ci.sh`` uses this as the telemetry-overhead gate: the
+refreshed BENCH_pr4 must keep identical cycle counts and wall times within
+tolerance of the previous snapshot (telemetry detached = free).
+
+Exit status: 0 when every shared case agrees, 1 on any violation (or on a
+schema/config mismatch — comparing a smoke run against a full run is
+meaningless).  Cases or keys present on only one side are reported as
+warnings unless ``--strict`` makes them failures.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _is_int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def diff_cases(old: dict, new: dict, rtol: float, atol: float,
+               skip: frozenset[str] = frozenset(),
+               float_keys: frozenset[str] = frozenset()):
+    """Yield ``(kind, message)`` findings; kind is 'fail' or 'warn'.
+
+    ``float_keys`` forces tolerance-compare on keys that would otherwise be
+    integer-exact (e.g. a counter known to be load-dependent)."""
+    for name in sorted(old.keys() | new.keys()):
+        if name not in new:
+            yield "warn", f"case {name!r} only in OLD"
+            continue
+        if name not in old:
+            yield "warn", f"case {name!r} only in NEW"
+            continue
+        a, b = old[name], new[name]
+        for key in sorted(a.keys() | b.keys()):
+            if key in skip:
+                continue
+            if key not in b or key not in a:
+                side = "OLD" if key in a else "NEW"
+                yield "warn", f"{name}.{key} only in {side}"
+                continue
+            va, vb = a[key], b[key]
+            if not (_is_num(va) and _is_num(vb)):
+                if va != vb:
+                    yield "warn", f"{name}.{key}: {va!r} != {vb!r}"
+                continue
+            if _is_int(va) and _is_int(vb) and key not in float_keys:
+                if va != vb:
+                    yield ("fail", f"{name}.{key}: deterministic counter "
+                           f"changed {va} -> {vb}")
+            else:
+                lim = atol + rtol * max(abs(va), abs(vb))
+                if abs(va - vb) > lim:
+                    yield ("fail", f"{name}.{key}: {va} -> {vb} "
+                           f"(|delta|={abs(va - vb):.4g} > {lim:.4g} "
+                           f"at rtol={rtol} atol={atol})")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", metavar="OLD.json")
+    ap.add_argument("new", metavar="NEW.json")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="relative tolerance for float-valued keys "
+                    "(wall times etc.; default 0.25)")
+    ap.add_argument("--atol", type=float, default=0.05,
+                    help="absolute slack added to the tolerance band "
+                    "(absorbs sub-tick walls; default 0.05)")
+    ap.add_argument("--skip", action="append", default=[], metavar="KEY",
+                    help="ignore this per-case key (repeatable)")
+    ap.add_argument("--float-key", action="append", default=[],
+                    metavar="KEY", help="tolerance-compare this integer key "
+                    "instead of requiring exact equality (repeatable)")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing cases/keys and non-numeric drift fail "
+                    "instead of warning")
+    args = ap.parse_args(argv)
+
+    arts = []
+    for path in (args.old, args.new):
+        try:
+            with open(path) as f:
+                arts.append(json.load(f))
+        except (OSError, ValueError) as e:
+            print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+            return 1
+    old, new = arts
+    fails = 0
+    for meta in ("schema", "config"):
+        if old.get(meta) != new.get(meta):
+            print(f"FAIL: {meta} mismatch: "
+                  f"{old.get(meta)!r} != {new.get(meta)!r}")
+            fails += 1
+    for side, art in (("OLD", old), ("NEW", new)):
+        if art.get("errors"):
+            print(f"FAIL: {side} is a partial artifact "
+                  f"(errors on {sorted(art['errors'])})")
+            fails += 1
+    findings = list(diff_cases(old.get("cases", {}), new.get("cases", {}),
+                               args.rtol, args.atol,
+                               skip=frozenset(args.skip),
+                               float_keys=frozenset(args.float_key)))
+    for kind, msg in findings:
+        if args.strict and kind == "warn":
+            kind = "fail"
+        print(f"{kind.upper()}: {msg}")
+        fails += kind == "fail"
+    n_cases = len(old.get("cases", {}).keys() & new.get("cases", {}).keys())
+    if fails:
+        print(f"bench_diff: {fails} failure(s) across {n_cases} shared "
+              f"case(s)")
+        return 1
+    print(f"bench_diff: OK — {n_cases} shared case(s) agree "
+          f"(rtol={args.rtol}, atol={args.atol})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

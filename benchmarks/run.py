@@ -20,7 +20,13 @@ could not afford); ``--explore [PATH]`` runs the mapping auto-tuner
 (``repro.explore``) on heat2d/star_3d/hdiff and writes the Pareto-front
 snapshot (BENCH_pr5.json: measured fronts over cycles/PEs/channel-load vs
 the analytical §VI baseline, evaluations cached in ``<PATH>.cache``);
+``--trace PATH`` runs one routed case with a telemetry sink attached and
+writes a Perfetto trace_event JSON (see ``docs/telemetry.md``);
 ``--smoke`` shrinks the grids so CI can afford it.
+
+A case that fails inside an artifact no longer aborts the refresh: the
+remaining cases still run, the partial artifact is written with an
+``errors`` map, and the process exits nonzero.
 
 ``--engine {interp,vector,both}`` selects the simulation backend for the
 pr2/pr3 artifact cases — ``both`` times the two backends, asserts identical
@@ -108,37 +114,48 @@ def artifact_cases(smoke: bool, engine: str = "interp",
     topo = FabricTopology.mesh(16, 16)
     base = "vector" if engine == "vector" else "interp"
     cases = {}
+    errors = {}
     for name, spec, mapper, w in specs:
         if case and name != case:
             continue
-        x = np.random.default_rng(0).normal(size=spec.grid_shape)
-        mk = lambda: mapper(spec, workers=w)            # noqa: E731
-        ideal, routed, rf, wi, wr, plan = _sim_pair(mk, x, base, topo)
-        wall_s = wi + wr
-        s = rf.stats()
-        cases[name] = {
-            "grid": list(spec.grid_shape), "radii": list(spec.radii),
-            "workers": w, "pe_instructions": len(plan.dfg.nodes),
-            "cycles_ideal": ideal.cycles, "cycles_routed": routed.cycles,
-            "inflation": round(routed.cycles / ideal.cycles, 4),
-            "gflops_ideal": round(ideal.gflops, 3),
-            "gflops_routed": round(routed.gflops, 3),
-            "pct_of_roofline_ideal": round(ideal.pct_of_roofline, 4),
-            "pct_of_roofline_routed": round(routed.pct_of_roofline, 4),
-            "hops_mean": s["hops_mean"], "hops_max": s["hops_max"],
-            "weighted_hops": s["weighted_hops"],
-            "max_channel_load": s["max_channel_load"],
-            "pe_utilization": s["pe_utilization"],
-            "token_hops": routed.fabric["token_hops"],
-            "stall_cycles": routed.fabric["stall_cycles"],
-            "sim_wall_s": round(wall_s, 3),
-        }
-        if engine == "both":
-            vi, vr, _, vwi, vwr, _ = _sim_pair(mk, x, "vector", topo)
-            _assert_engines_agree(name, (ideal, routed), (vi, vr))
-            cases[name]["sim_wall_s_vector"] = round(vwi + vwr, 3)
-            cases[name]["vector_speedup"] = round(wall_s / (vwi + vwr), 2)
-    return cases
+        try:
+            _artifact_case(cases, name, spec, mapper, w, topo, base, engine)
+        except Exception as e:                  # isolate: finish the rest
+            errors[name] = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+    return cases, errors
+
+
+def _artifact_case(cases, name, spec, mapper, w, topo, base, engine):
+    import numpy as np
+
+    x = np.random.default_rng(0).normal(size=spec.grid_shape)
+    mk = lambda: mapper(spec, workers=w)                # noqa: E731
+    ideal, routed, rf, wi, wr, plan = _sim_pair(mk, x, base, topo)
+    wall_s = wi + wr
+    s = rf.stats()
+    cases[name] = {
+        "grid": list(spec.grid_shape), "radii": list(spec.radii),
+        "workers": w, "pe_instructions": len(plan.dfg.nodes),
+        "cycles_ideal": ideal.cycles, "cycles_routed": routed.cycles,
+        "inflation": round(routed.cycles / ideal.cycles, 4),
+        "gflops_ideal": round(ideal.gflops, 3),
+        "gflops_routed": round(routed.gflops, 3),
+        "pct_of_roofline_ideal": round(ideal.pct_of_roofline, 4),
+        "pct_of_roofline_routed": round(routed.pct_of_roofline, 4),
+        "hops_mean": s["hops_mean"], "hops_max": s["hops_max"],
+        "weighted_hops": s["weighted_hops"],
+        "max_channel_load": s["max_channel_load"],
+        "pe_utilization": s["pe_utilization"],
+        "token_hops": routed.fabric["token_hops"],
+        "stall_cycles": routed.fabric["stall_cycles"],
+        "sim_wall_s": round(wall_s, 3),
+    }
+    if engine == "both":
+        vi, vr, _, vwi, vwr, _ = _sim_pair(mk, x, "vector", topo)
+        _assert_engines_agree(name, (ideal, routed), (vi, vr))
+        cases[name]["sim_wall_s_vector"] = round(vwi + vwr, 3)
+        cases[name]["vector_speedup"] = round(wall_s / (vwi + vwr), 2)
 
 
 def program_artifact_cases(smoke: bool, engine: str = "interp",
@@ -162,9 +179,9 @@ def program_artifact_cases(smoke: bool, engine: str = "interp",
     topo = FabricTopology.mesh(16, 16)
     base = "vector" if engine == "vector" else "interp"
     cases = {}
-    for name, prog, w in progs:
-        if case and name != case:
-            continue
+    errors = {}
+
+    def one(name, prog, w):
         rng = np.random.default_rng(0)
         inputs = {f: rng.normal(size=prog.grid_shape)
                   for f in prog.in_fields}
@@ -220,7 +237,16 @@ def program_artifact_cases(smoke: bool, engine: str = "interp",
             # comparable number: the routed sim alone, like sim_wall_s
             cases[name]["sim_wall_s_vector"] = round(vwr, 3)
             cases[name]["vector_speedup"] = round(wall_s / vwr, 2)
-    return cases
+
+    for name, prog, w in progs:
+        if case and name != case:
+            continue
+        try:
+            one(name, prog, w)
+        except Exception as e:                  # isolate: finish the rest
+            errors[name] = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+    return cases, errors
 
 
 def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
@@ -249,10 +275,18 @@ def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
     large_grid = (96, 128) if smoke else (256, 512)
 
     cases = {}
+    errors = {}
 
     def record(name, kind, grid, w, mk, mk_x):
         if case and name != case:
             return
+        try:
+            _record(name, kind, grid, w, mk, mk_x)
+        except Exception as e:                  # isolate: finish the rest
+            errors[name] = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+
+    def _record(name, kind, grid, w, mk, mk_x):
         plan0 = mk()
         x = mk_x(plan0)
         vi, vr, rf, vwi, vwr, _ = _sim_pair(mk, x, "vector", topo)
@@ -296,7 +330,7 @@ def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
     prog = two_stage_heat(*large_grid)
     record("large_heat2_pipeline", "large-vector-only", large_grid, 8,
            lambda: lower(prog, workers=8), prog_x)
-    return cases
+    return cases, errors
 
 
 def explore_artifact_cases(smoke: bool, case: str | None = None,
@@ -345,9 +379,9 @@ def explore_artifact_cases(smoke: bool, case: str | None = None,
     }
 
     cases = {}
-    for name, cfg in targets.items():
-        if case and name != case:
-            continue
+    errors = {}
+
+    def one(name, cfg):
         cache = EvalCache(cache_path) if cache_path else None
         res = explore(cfg["target"], CGRA, options=cfg["options"],
                       budget=Budget(routed_finalists=4),
@@ -360,22 +394,39 @@ def explore_artifact_cases(smoke: bool, case: str | None = None,
         assert best.cycles <= analytic.cycles, (
             f"{name}: tuner best {best.cycles} cycles worse than analytical "
             f"{analytic.cycles}")
+        cs = res.stats["cache"]
+        print(f"explore[{name}]: cache hits={cs['hits']} "
+              f"misses={cs['misses']} "
+              f"failures_replayed={cs['failures_replayed']} "
+              f"entries={cs['entries']}", file=sys.stderr)
         cases[name] = {
             **{k: v for k, v in res.to_json().items() if k != "failures"},
             "n_failures": len(res.failures),
             "margin_pct": round(
                 100.0 * (analytic.cycles - best.cycles) / analytic.cycles, 2),
         }
-    return cases
+
+    for name, cfg in targets.items():
+        if case and name != case:
+            continue
+        try:
+            one(name, cfg)
+        except Exception as e:                  # isolate: finish the rest
+            errors[name] = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+    return cases, errors
 
 
 def _write_snapshot(path: str, schema: str, smoke: bool, case: str | None,
-                    cases: dict, **extra) -> None:
+                    produced: tuple[dict, dict], **extra) -> None:
     """Shared artifact writer.  A ``--case`` filter that matches nothing in
     this artifact leaves the file untouched (the artifacts' case namespaces
     are disjoint, so a multi-artifact run with one --case is expected to
-    skip the others)."""
-    if not cases:
+    skip the others).  Failed cases don't lose the rest: the artifact is
+    written with whatever succeeded (tagged ``errors``), then the failure
+    is re-raised so the run still exits nonzero."""
+    cases, errors = produced
+    if not cases and not errors:
         if case:
             print(f"--case {case!r}: no {schema} case matches; "
                   f"{path} left untouched", file=sys.stderr)
@@ -383,10 +434,16 @@ def _write_snapshot(path: str, schema: str, smoke: bool, case: str | None,
         raise ValueError(f"no cases produced for {schema}")
     art = {"schema": schema, "config": "smoke" if smoke else "full",
            "fabric": "mesh16x16", **extra, "cases": cases}
+    if errors:
+        art["errors"] = errors
     with open(path, "w") as f:
         json.dump(art, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {path}", file=sys.stderr)
+    if errors:
+        raise RuntimeError(
+            f"{schema}: {len(errors)} case(s) failed: {sorted(errors)} "
+            f"(partial artifact written)")
 
 
 def write_artifact(path: str, smoke: bool, engine: str = "interp",
@@ -423,6 +480,44 @@ def write_explore_artifact(path: str, smoke: bool,
               "<artifact>.cache"))
 
 
+def write_trace_artifact(path: str, smoke: bool,
+                         case: str | None = None) -> None:
+    """``--trace``: one routed telemetry-on run (the pr2 2d case unless
+    ``--case`` picks another rank) exported as a validated Perfetto JSON
+    trace, with the text report on stderr.  See docs/telemetry.md."""
+    import numpy as np
+
+    from repro.core import CGRA, map_1d, map_2d, map_3d, simulate
+    from repro.core.spec import heat_3d, paper_stencil_1d, paper_stencil_2d
+    from repro.fabric import FabricTopology, place, route
+    from repro.telemetry import (Telemetry, render_report, validate_trace,
+                                 write_trace)
+
+    if smoke:
+        specs = {"1d": (paper_stencil_1d(n=1200, rx=8), map_1d, 8),
+                 "2d": (paper_stencil_2d(ny=30, nx=48, r=12), map_2d, 8),
+                 "3d": (heat_3d(10, 12, 16, dtype="float64"), map_3d, 8)}
+    else:
+        specs = {"1d": (paper_stencil_1d(n=9720, rx=8), map_1d, 8),
+                 "2d": (paper_stencil_2d(ny=64, nx=128, r=12), map_2d, 8),
+                 "3d": (heat_3d(16, 24, 32, dtype="float64"), map_3d, 8)}
+    name = case or "2d"
+    if name not in specs:
+        raise ValueError(f"--trace has no case {name!r}; "
+                         f"choose one of {sorted(specs)}")
+    spec, mapper, w = specs[name]
+    plan = mapper(spec, workers=w)
+    rf = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    x = np.random.default_rng(0).normal(size=spec.grid_shape)
+    tel = Telemetry()
+    simulate(plan, x, CGRA, fabric=rf, engine="vector", telemetry=tel)
+    obj = write_trace(tel, path)
+    n = validate_trace(obj)
+    print(render_report(tel), file=sys.stderr)
+    print(f"wrote {path} ({n} trace events; open in ui.perfetto.dev)",
+          file=sys.stderr)
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--artifact", metavar="PATH",
@@ -436,6 +531,10 @@ def main(argv: list[str] | None = None) -> None:
                     help="run the mapping auto-tuner (repro.explore) on "
                     "heat2d/star_3d/hdiff and write the Pareto-front "
                     "snapshot (default PATH: BENCH_pr5.json)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="run one routed smoke case with telemetry and "
+                    "write a Perfetto trace_event JSON to PATH "
+                    "(open in ui.perfetto.dev)")
     ap.add_argument("--engine", choices=("interp", "vector", "both"),
                     default="interp",
                     help="simulation backend for the pr2/pr3 artifacts; "
@@ -448,7 +547,7 @@ def main(argv: list[str] | None = None) -> None:
                     help="skip the CSV benchmark modules (needs an artifact)")
     args = ap.parse_args(argv)
     any_artifact = (args.artifact or args.program_artifact
-                    or args.engine_artifact or args.explore)
+                    or args.engine_artifact or args.explore or args.trace)
     if args.artifact_only and not any_artifact:
         ap.error("--artifact-only requires --artifact/--program-artifact/"
                  "--engine-artifact")
@@ -488,6 +587,12 @@ def main(argv: list[str] | None = None) -> None:
     if args.explore:
         try:
             write_explore_artifact(args.explore, args.smoke, args.case)
+        except Exception:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+    if args.trace:
+        try:
+            write_trace_artifact(args.trace, args.smoke, args.case)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)

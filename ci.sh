@@ -12,11 +12,28 @@
 # diverge from the interpreter's; the pr5 refresh asserts every front is
 # non-dominated and the tuner's best never loses to the analytical §VI
 # baseline (tuner evals cache in BENCH_pr5.json.cache, so reruns are cheap).
+#
+# The refresh also emits a Perfetto trace artifact for one routed smoke case
+# (--trace; validated, open in ui.perfetto.dev) and then gates the refreshed
+# BENCH_pr4 against the previous snapshot with benchmarks/bench_diff.py:
+# every deterministic counter (cycles, token hops, stalls) must be identical
+# — the telemetry hooks are opt-in and a detached sink must not perturb the
+# simulation — and wall times must stay within a generous machine-noise
+# tolerance (the disabled-telemetry overhead bound; the precise <2% claim is
+# measured in docs/telemetry.md).
 set -euo pipefail
 cd "$(dirname "$0")"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+trace_out="${TRACE_OUT:-$(mktemp -d)/trace_2d.json}"
+prev_pr4="$(mktemp -d)/BENCH_pr4.prev.json"
+cp BENCH_pr4.json "$prev_pr4"
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --artifact BENCH_pr2.json \
     --program-artifact BENCH_pr3.json --engine-artifact BENCH_pr4.json \
-    --explore BENCH_pr5.json \
+    --explore BENCH_pr5.json --trace "$trace_out" \
     --engine both --smoke --artifact-only
+
+python benchmarks/bench_diff.py "$prev_pr4" BENCH_pr4.json \
+    --rtol 0.5 --atol 0.1

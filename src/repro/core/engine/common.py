@@ -16,13 +16,20 @@ import dataclasses
 class SimDeadlock(RuntimeError):
     """Raised on deadlock or a ``max_cycles`` overrun.  ``cycles`` carries
     how many cycles were simulated before giving up (budget accounting in
-    ``repro.explore``); ``timed_out`` distinguishes the overrun case."""
+    ``repro.explore``); ``timed_out`` distinguishes the overrun case.
+
+    ``stall_summary`` is the stall-attribution diagnostic (which nodes were
+    blocked on what — see ``repro.telemetry``): the last-N-cycle window when
+    a telemetry sink was attached, the final-cycle classification otherwise.
+    Both engines embed its rendered form in the exception message."""
 
     def __init__(self, msg: str, *, cycles: int = 0,
-                 timed_out: bool = False):
+                 timed_out: bool = False,
+                 stall_summary: dict | None = None):
         super().__init__(msg)
         self.cycles = cycles
         self.timed_out = timed_out
+        self.stall_summary = stall_summary
 
 
 @dataclasses.dataclass

@@ -19,11 +19,18 @@ from __future__ import annotations
 from collections import deque
 from typing import TYPE_CHECKING
 
+import numpy as np
+
 from repro.core.dfg import DFG, Edge, Node
 from repro.core.engine.common import (RawStats, SimDeadlock, deadlock_message)
+from repro.telemetry.probe import (ST_FIRED, ST_INACTIVE, ST_INPUT_STARVED,
+                                   ST_MEM_ARB, ST_NET_WAIT,
+                                   ST_OUTPUT_BLOCKED, format_stall_summary,
+                                   summary_from_state)
 
 if TYPE_CHECKING:  # pragma: no cover - avoids core <-> fabric import cycle
     from repro.fabric.route import RoutedFabric
+    from repro.telemetry import Telemetry
 
 
 class _Network:
@@ -36,7 +43,8 @@ class _Network:
     per token (booked once per firing), not once per edge.
     """
 
-    def __init__(self, fabric: "RoutedFabric", g: DFG):
+    def __init__(self, fabric: "RoutedFabric", g: DFG,
+                 telemetry: "Telemetry | None" = None):
         from repro.fabric.route import edge_key  # deferred: no import cycle
         self.wpc = {k: l.words_per_cycle for k, l in
                     fabric.topo.links.items()}
@@ -50,8 +58,11 @@ class _Network:
         self.last_arrival: dict[int, int] = {}
         self.token_hops = 0
         self.stall_cycles = 0            # link-contention wait, summed
+        self.tel = telemetry
+        self.lid = telemetry.link_ids if telemetry is not None else None
 
     def broadcast(self, nd: Node, v, cycle: int) -> None:
+        tel = self.tel
         booked: dict[tuple, int] = {}    # link -> slot of this token's copy
         for e in nd.out_edges:
             links = self.routes[id(e)]
@@ -71,6 +82,8 @@ class _Network:
                 self.used[(lk, slot)] = self.used.get((lk, slot), 0) + 1
                 booked[lk] = slot
                 self.token_hops += 1
+                if tel is not None:
+                    tel.link_book(self.lid[lk], slot, slot - t)
                 t = slot + 1
             arr = max(t, self.last_arrival.get(id(e), 0))  # FIFO per edge
             self.last_arrival[id(e)] = arr
@@ -98,7 +111,8 @@ class _Network:
 
 def run(plan, flat_in, flat_out, elems_per_cycle: float,
         max_cycles: int = 50_000_000,
-        fabric: "RoutedFabric | None" = None) -> RawStats:
+        fabric: "RoutedFabric | None" = None,
+        telemetry: "Telemetry | None" = None) -> RawStats:
     """Run the per-cycle interpreter; mutates ``flat_out`` in place."""
     g = plan.dfg
 
@@ -116,7 +130,7 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
         state[nd.nid] = st
     assert done_pending, "graph has no completion (cmp) node"
 
-    net = _Network(fabric, g) if fabric is not None else None
+    net = _Network(fabric, g, telemetry) if fabric is not None else None
 
     credit = 0.0
     cycles = 0
@@ -147,8 +161,68 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
     n_ids = 1 + max(nd.nid for nd in nodes)
     in_avail = [False] * n_ids
     out_free = [False] * n_ids
+
+    tel = telemetry
+    all_recs = snap_recs + imux_recs
+    prev_fires = [0] * n_ids
+    if tel is not None:
+        for nd in nodes:           # plans can be re-simulated; fires persist
+            prev_fires[nd.nid] = nd.fires
+
+    def _classify(no_fires: bool = False) -> np.ndarray:
+        """One exclusive ``ST_*`` code per node for the cycle just executed,
+        derived from this cycle's eligibility snapshot plus fire deltas.
+        Mirrors the vector engine's classification exactly (parity-gated in
+        tests/test_telemetry.py); ``no_fires`` skips the delta check on the
+        deadlock path, where by definition nothing fired."""
+        stb = np.empty(n_ids, dtype=np.int64)
+        for nd, nid, op, stx, ine, _ in all_recs:
+            if not no_fires and nd.fires > prev_fires[nid]:
+                prev_fires[nid] = nd.fires
+                stb[nid] = ST_FIRED
+            elif (op == "addr" and stx["k"] >= nd.params["count"]) \
+                    or (op == "sync" and stx["emitted"]) \
+                    or (op == "cmp" and stx["fired"]):
+                stb[nid] = ST_INACTIVE
+            elif not in_avail[nid]:
+                if net is None:
+                    stb[nid] = ST_INPUT_STARVED
+                else:
+                    if op == "imux":
+                        pat = nd.params["pattern"]
+                        waiting = bool(
+                            net.transit[id(ine[pat[stx["k"] % len(pat)]])])
+                    else:
+                        waiting = any(net.transit[id(e)] for e in ine)
+                    stb[nid] = ST_NET_WAIT if waiting else ST_INPUT_STARVED
+            elif not out_free[nid] and not (
+                    op in ("sync", "cmp")
+                    or (op == "filter" and not nd.params["keep"](stx["k"]))):
+                # output space is optional for sync/cmp (emission rides the
+                # fire) and for a filter whose next token will be dropped —
+                # same out_opt semantics as the compiled plan's.
+                stb[nid] = ST_OUTPUT_BLOCKED
+            else:           # eligible but lost the memory-port arbitration
+                stb[nid] = ST_MEM_ARB
+        return stb
+
+    def _final_cycle_summary() -> dict:
+        names = [""] * n_ids
+        ops = [""] * n_ids
+        for nd in nodes:
+            names[nd.nid] = nd.name
+            ops[nd.nid] = nd.op
+        return summary_from_state(_classify(no_fires=True), names, ops)
+
     while not finished:
         if cycles >= max_cycles:
+            if tel is not None:
+                tel.finish(cycles)
+                summ = tel.stall_summary(window=64)
+                raise SimDeadlock(f"exceeded max_cycles={max_cycles}"
+                                  + format_stall_summary(summ),
+                                  cycles=cycles, timed_out=True,
+                                  stall_summary=summ)
             raise SimDeadlock(f"exceeded max_cycles={max_cycles}",
                               cycles=cycles, timed_out=True)
         cycles += 1
@@ -273,11 +347,22 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
                     e.push(v)
             else:
                 net.broadcast(nd, v, cycles)
+        if tel is not None:
+            tel.observe(cycles, _classify())
         if not any_fired and not finished:
             if net is not None and net.in_flight():
                 continue                 # tokens still riding the network
-            raise SimDeadlock(deadlock_message(cycles, nodes), cycles=cycles)
+            if tel is not None:
+                tel.finish(cycles)
+                summ = tel.stall_summary(window=64)
+            else:
+                summ = _final_cycle_summary()
+            raise SimDeadlock(deadlock_message(cycles, nodes)
+                              + format_stall_summary(summ),
+                              cycles=cycles, stall_summary=summ)
 
+    if tel is not None:
+        tel.finish(cycles)
     return RawStats(
         cycles=cycles, flops=flops, loads=loads, stores=stores, fires=fires,
         max_queue_total=sum(e.max_occupancy for e in g.edges()),

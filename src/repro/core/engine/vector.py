@@ -52,6 +52,10 @@ from repro.core.engine.compile import (CompiledPlan, K_ADDR, K_CMP, K_FLT,
                                        K_LIN, K_LOAD, K_STORE, K_SYNC,
                                        SLOT_BITS, UNBOUNDED, compile_plan,
                                        compiled_for)
+from repro.telemetry.probe import (ST_FIRED, ST_INACTIVE, ST_INPUT_STARVED,
+                                   ST_MEM_ARB, ST_NET_WAIT,
+                                   ST_OUTPUT_BLOCKED, format_stall_summary,
+                                   summary_from_state)
 
 _BIG = 1 << 60
 _SPARSE_MAX = 96          # eligible-node count at or below which the scalar
@@ -131,7 +135,7 @@ class _Rings:
 
 
 def run(plan, flat_in, flat_out, elems_per_cycle: float,
-        max_cycles: int = 50_000_000, fabric=None) -> RawStats:
+        max_cycles: int = 50_000_000, fabric=None, telemetry=None) -> RawStats:
     """Compile ``plan`` (+ routes) and run the vectorized cycle loop;
     mutates ``flat_out`` in place.  Results match ``engine.interp`` exactly.
 
@@ -141,7 +145,7 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
     path — transparently recompiles instead of using stale tables."""
     cp = compiled_for(plan, fabric)
     return _run_compiled(cp.require_current(), flat_in, flat_out,
-                         elems_per_cycle, max_cycles)
+                         elems_per_cycle, max_cycles, telemetry)
 
 
 def _deadlock_msg(cp: CompiledPlan, rings: _Rings, cycles: int) -> str:
@@ -179,8 +183,10 @@ def _expand_push(start, flat, nids, vals, rings, qstart, pop_first,
 
 
 def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
-                  elems_per_cycle: float, max_cycles: int) -> RawStats:
+                  elems_per_cycle: float, max_cycles: int,
+                  tel=None) -> RawStats:
     nN, nE = cp.n_nodes, cp.n_edges
+    telon = tel is not None
     rings = _Rings(cp.cap, cp.phys0)
     qlen = rings.qlen
     in_mat, out_mat, capmat = cp.in_mat, cp.out_mat, cp.capmat
@@ -266,6 +272,8 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
         tlen = np.zeros(nE + 1, dtype=np.int64)
         tlen_mv = memoryview(tlen)
         track_occ = not all_unbounded      # occ only matters for bounded
+        # telemetry needs in-flight counts too (net-wait classification)
+        track_tlen = track_occ or telon
 
     token_hops = stall_cycles = 0
     credit = 0.0
@@ -285,7 +293,7 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
             heapq.heappush(arr_heap, arr)
         else:
             lst.append((eid, v))
-        if track_occ:
+        if track_tlen:
             tlen_mv[eid] += 1
 
     def send_routed(nid: int, v: float) -> None:
@@ -324,6 +332,8 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
                 if multi:
                     booked[key] = s
                 token_hops += 1
+                if telon:
+                    tel.link_book(key >> SLOT_BITS, s, s - t)
                 t = s + 1
             la = last_arr[eid]
             arr = t if t > la else la
@@ -365,6 +375,8 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
                 if multi:
                     booked[key] = s
                 token_hops += 1
+                if telon:
+                    tel.link_book(key >> SLOT_BITS, s, s - t)
                 t = s + 1
             la = last_arr[eid]
             arr = t if t > la else la
@@ -406,8 +418,48 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
         if not wpc1:
             send_routed = send_routed_general
 
+    if telon:
+        prev_fires = np.zeros(nN, dtype=np.int64)
+    in_ok = elig = None                    # bound per cycle; read by _classify
+
+    def _classify(fired_mask: np.ndarray) -> np.ndarray:
+        """One exclusive ``ST_*`` code per node for the cycle just executed,
+        from this cycle's eligibility snapshot + the fire delta.  Mirrors the
+        interpreter's scalar classification exactly (parity-gated)."""
+        state = np.full(nN, ST_INACTIVE, dtype=np.int64)
+        rest = active & ~fired_mask
+        starv = rest & ~in_ok
+        if net is not None:
+            # starved, but tokens are riding the network toward an input
+            intrans = tlen[in_mat].sum(axis=1) > 0
+            if n_imux:
+                intrans[imux_ids] = tlen[imux_sel] > 0
+            state[starv & intrans] = ST_NET_WAIT
+            starv &= ~intrans
+        state[starv] = ST_INPUT_STARVED
+        state[rest & in_ok & ~elig] = ST_OUTPUT_BLOCKED
+        state[rest & elig] = ST_MEM_ARB    # lost memory-port arbitration
+        state[fired_mask] = ST_FIRED
+        return state
+
+    def _final_cycle_summary() -> dict:
+        names = [""] * nN
+        ops = [""] * nN
+        for nd in cp.nodes:
+            names[nd.nid] = nd.name
+            ops[nd.nid] = nd.op
+        return summary_from_state(_classify(np.zeros(nN, dtype=bool)),
+                                  names, ops)
+
     while not finished:
         if cycles >= max_cycles:
+            if telon:
+                tel.finish(cycles)
+                summ = tel.stall_summary(window=64)
+                raise SimDeadlock(f"exceeded max_cycles={max_cycles}"
+                                  + format_stall_summary(summ),
+                                  cycles=cycles, timed_out=True,
+                                  stall_summary=summ)
             raise SimDeadlock(f"exceeded max_cycles={max_cycles}",
                               cycles=cycles, timed_out=True)
         cycles += 1
@@ -429,7 +481,7 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
             while arr_heap and arr_heap[0] <= cycles:
                 for e, v in arrivals.pop(heapq.heappop(arr_heap)):
                     s_push(e, v)
-                    if track_occ:
+                    if track_tlen:
                         tlen_mv[e] -= 1
 
         # phase 1: snapshot eligibility ------------------------------------
@@ -735,9 +787,21 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
                         if book[nid] is not None:
                             send_routed(nid, v)
 
+        if telon:
+            fired_mask = fires_arr != prev_fires
+            np.copyto(prev_fires, fires_arr)
+            tel.observe(cycles, _classify(fired_mask))
+
         if not any_fired and not finished:
             if net is None or not arr_heap:
-                raise SimDeadlock(_deadlock_msg(cp, rings, cycles), cycles=cycles)
+                if telon:
+                    tel.finish(cycles)
+                    summ = tel.stall_summary(window=64)
+                else:
+                    summ = _final_cycle_summary()
+                raise SimDeadlock(_deadlock_msg(cp, rings, cycles)
+                                  + format_stall_summary(summ),
+                                  cycles=cycles, stall_summary=summ)
             # event skip: state is static until the next arrival (or the
             # memory credit crossing 1.0) — fast-forward to it.
             nxt = arr_heap[0]
@@ -755,7 +819,11 @@ def _run_compiled(cp: CompiledPlan, flat_in, flat_out,
                     credit = min(credit + elems_per_cycle, cap4)
                     i += 1
                 cycles += k
+                if telon:     # skipped cycles repeat the standing state
+                    tel.observe_repeat(k)
 
+    if telon:
+        tel.finish(cycles)
     # write back per-node/per-edge telemetry so both backends expose the
     # same post-run state on the plan objects.
     fires: dict[str, int] = {}

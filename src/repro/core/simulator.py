@@ -50,6 +50,7 @@ from repro.core.roofline import Machine, analyze
 
 if TYPE_CHECKING:  # pragma: no cover - avoids core <-> fabric import cycle
     from repro.fabric.route import RoutedFabric
+    from repro.telemetry import Telemetry
 
 __all__ = ["SimDeadlock", "SimResult", "simulate", "ENGINES"]
 
@@ -87,7 +88,8 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
              max_cycles: int = 50_000_000,
              mem_efficiency: float = 1.0,
              fabric: "RoutedFabric | None" = None,
-             engine: str = "interp") -> SimResult:
+             engine: str = "interp",
+             telemetry: "Telemetry | None" = None) -> SimResult:
     """``mem_efficiency`` derates the memory-port bandwidth to model cache
     conflict misses (the paper observed "more conflict misses in the cache
     for stencil 2D" — its cycle-accurate 2D result corresponds to ~0.80;
@@ -98,6 +100,11 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
 
     ``engine``: ``"interp"`` (reference per-node interpreter) or ``"vector"``
     (compiled struct-of-arrays engine, identical results, much faster).
+
+    ``telemetry``: a ``repro.telemetry.Telemetry`` sink to record per-node
+    fire/stall timelines, stall attribution and per-link occupancy into
+    (``docs/telemetry.md``); ``None`` (the default) keeps the engines on
+    their uninstrumented hot paths.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose one of {ENGINES}")
@@ -109,7 +116,10 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
 
     epc = mem_elems_per_cycle(spec, machine, mem_efficiency)
     backend = _interp.run if engine == "interp" else _vector.run
-    stats = backend(plan, flat_in, flat_out, epc, max_cycles, fabric)
+    if telemetry is not None:
+        telemetry.attach(plan, fabric)
+    stats = backend(plan, flat_in, flat_out, epc, max_cycles, fabric,
+                    telemetry)
 
     gflops = (stats.flops / stats.cycles) * machine.clock_ghz
     roof = analyze(spec, machine, workers=plan.workers)

@@ -29,6 +29,7 @@ class EvalCache:
         self.data: dict[str, dict] = {}
         self.hits = 0
         self.misses = 0
+        self.failure_hits = 0           # replayed known-bad configs (free)
         if self.path and os.path.exists(self.path):
             try:
                 with open(self.path) as f:
@@ -44,10 +45,19 @@ class EvalCache:
             self.misses += 1
         else:
             self.hits += 1
+            if "failed" in ent:
+                self.failure_hits += 1
         return ent
 
     def put(self, key: str, value: dict) -> None:
         self.data[key] = value
+
+    def stats(self) -> dict:
+        """Hit/miss accounting for this process (the persistent store only
+        grows; ``entries`` is its current size)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "failures_replayed": self.failure_hits,
+                "entries": len(self.data)}
 
     def save(self) -> None:
         if not self.path:

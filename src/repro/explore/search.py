@@ -138,24 +138,49 @@ def _point_from_cache(cfg: MappingConfig, ent: dict,
 def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
               cache: EvalCache, state: _BudgetState, engine: str,
               failures: list, skipped: list, verify: bool,
-              routed: bool) -> EvalPoint | None:
+              routed: bool, tel=None) -> EvalPoint | None:
     """One (possibly cached) measurement; None on failure/budget-skip."""
     key = cfg.key(scope, ideal=not routed)
+    t0 = time.perf_counter()
+    mode = "routed" if routed else "ideal"
+
+    def span(outcome: str, *, cached: bool = False,
+             cycles: int | None = None) -> None:
+        """One structured span per evaluation into the telemetry sink —
+        exported as a search-timeline trace (docs/telemetry.md)."""
+        if tel is None:
+            return
+        b = state.budget
+        el = time.perf_counter() - t0
+        tel.span(f"{mode} {key[:10]}", cat="tuner", track=f"search/{mode}",
+                 t0=tel.now() - el, dur=el, key=key, phase=mode,
+                 config=cfg.canonical(), outcome=outcome, cached=cached,
+                 cycles=cycles,
+                 evals_remaining=(None if b.max_evals is None
+                                  else b.max_evals - state.evals),
+                 sim_cycles_remaining=(None if b.max_sim_cycles is None
+                                       else b.max_sim_cycles
+                                       - state.sim_cycles))
+
     ent = cache.get(key)
     if ent is not None:
         if "failed" in ent:
             failures.append({"config": cfg.canonical(),
                              "reason": ent["failed"], "cached": True})
+            span(f"cached-failure: {ent['failed']}", cached=True)
             return None
+        span("cached", cached=True, cycles=ent["sim_cycles"])
         return _point_from_cache(cfg, ent, routed)
     if state.exhausted():
         skipped.append(cfg)
+        span("budget-skipped")
         return None
 
     def fail(reason: str) -> None:
         failures.append({"config": cfg.canonical(), "reason": reason,
                          "cached": False})
         cache.put(key, {"failed": reason})
+        span(f"failed: {reason}")
 
     try:
         plan = target.build(cfg)
@@ -202,6 +227,7 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
     cache.put(key, {"cycles": pt.cycles, "pes": pt.pes,
                     "chan": pt.max_channel_load, "gflops": pt.gflops,
                     "sim_cycles": pt.sim_cycles})
+    span("measured", cycles=res.cycles)
     return pt
 
 
@@ -211,11 +237,17 @@ def explore(target, machine: Machine, *,
             cache: EvalCache | str | None = None,
             engine: str = "vector",
             workload_timesteps: int = 1,
-            verify: bool = False) -> ExploreResult:
+            verify: bool = False,
+            telemetry=None) -> ExploreResult:
     """Search mapping configs for ``target`` (a ``StencilSpec``, a
     ``StencilProgram``, or a ready-made target) on ``machine`` and return
     the measured Pareto front.  See the module docstring for the staging;
-    ``docs/explore.md`` for the full semantics."""
+    ``docs/explore.md`` for the full semantics.
+
+    ``telemetry``: a ``repro.telemetry.Telemetry`` sink — the search records
+    one structured span per evaluation into it (config hash, outcome or
+    prune reason, cache hit/miss, wall time, budget remaining), exportable
+    as a search-timeline trace via ``repro.telemetry.write_trace``."""
     t0 = time.perf_counter()
     target = as_target(target, workload_timesteps=workload_timesteps)
     options = options or SpaceOptions()
@@ -226,6 +258,11 @@ def explore(target, machine: Machine, *,
     configs, analytic_cfg = enumerate_space(target, machine, options)
     kept, plog = prune_space(target, machine, configs, options,
                              keep=analytic_cfg)
+    if telemetry is not None:       # pruned configs get a (zero-cost) span
+        for cfg, reason in plog.dropped:
+            telemetry.span(f"pruned {reason}", cat="tuner",
+                           track="search/prune", config=cfg.canonical(),
+                           outcome=f"pruned: {reason}")
     # analytical baseline first: even a one-eval budget measures it
     kept.sort(key=lambda c: c != analytic_cfg)
 
@@ -244,7 +281,8 @@ def explore(target, machine: Machine, *,
     for cfg in kept:
         pt = _evaluate(target, cfg, machine, scope=scope, cache=cache,
                        state=state, engine=engine, failures=failures,
-                       skipped=skipped, verify=verify, routed=False)
+                       skipped=skipped, verify=verify, routed=False,
+                       tel=telemetry)
         if pt is not None:
             ideal_points.append(pt)
 
@@ -269,7 +307,7 @@ def explore(target, machine: Machine, *,
                     rpt = _evaluate(target, cfg, machine, scope=scope,
                                     cache=cache, state=state, engine=engine,
                                     failures=failures, skipped=skipped,
-                                    verify=False, routed=True)
+                                    verify=False, routed=True, tel=telemetry)
                     if rpt is not None:
                         routed_points.append(rpt)
         points = routed_points
@@ -293,6 +331,7 @@ def explore(target, machine: Machine, *,
         "n_budget_skipped": len(skipped),
         "sim_cycles_total": state.sim_cycles,
         "wall_s": round(time.perf_counter() - t0, 3),
+        "cache": cache.stats(),
     }
     return ExploreResult(
         target=target.name, machine=machine.name, points=points,

@@ -95,6 +95,13 @@ class RoutedFabric:
         """Per-link dynamic bandwidth, aligned with :meth:`link_index`."""
         return [l.words_per_cycle for l in self.topo.links.values()]
 
+    def link_names(self) -> list[str]:
+        """Human-readable ``(r,c)->(r,c)`` labels aligned with
+        :meth:`link_index` — the one naming scheme shared by :meth:`stats`
+        hotspots and the telemetry link tracks (``repro.telemetry``), so a
+        link in a Perfetto trace is findable in the routing report."""
+        return [f"{a}->{b}" for a, b in self.topo.links]
+
     # ----- congestion / utilization reporting -------------------------------
     def hotspots(self, k: int = 5) -> list[tuple[LinkKey, int, int]]:
         """Top-k links by channel load: (link, trees, token traffic)."""

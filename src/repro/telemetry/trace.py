@@ -1,0 +1,168 @@
+"""Chrome/Perfetto ``trace_event`` export for a :class:`Telemetry` sink.
+
+Open the written file in https://ui.perfetto.dev (or ``chrome://tracing``).
+The mapping from probes to tracks:
+
+* one process group per PE (placed runs: ``PE(r, c)``) or per worker/stage
+  pipeline (ideal runs: ``reader/w0`` …), with one thread track per node
+  (instruction) inside it — slices are the node's state intervals (``fire``
+  runs and the four attributed stall causes; ``inactive`` stretches are
+  omitted).  Timebase: 1 simulated cycle = 1 µs.
+* one counter track per contended link (any link that ever made a token
+  wait) sampling its per-cycle word occupancy, so the hot links from the
+  stall-attribution table are visually obvious.
+* one process for tuner search spans (``repro.explore`` evaluations), on the
+  wall-clock timebase — a whole sweep becomes one inspectable artifact.
+
+Events are emitted globally sorted by timestamp with integer ``ts``/``dur``
+— :func:`validate_trace` checks that (plus the required keys) and is run by
+the tests and by ``benchmarks/run.py --trace``.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.telemetry.probe import (ST_FIRED, ST_INACTIVE, STATE_NAMES,
+                                   Telemetry)
+
+__all__ = ["trace_events", "write_trace", "validate_trace"]
+
+_PID_SPANS = 1                      # tuner/search spans
+_PID_LINKS = 2                      # per-link occupancy counters
+_PID_GROUP0 = 10                    # first PE / worker-stage group
+
+
+def _node_events(tel: Telemetry) -> list[dict]:
+    evs: list[dict] = []
+    group_pid: dict[str, int] = {}
+    for nid, g in enumerate(tel.node_groups):
+        if g not in group_pid:
+            pid = _PID_GROUP0 + len(group_pid)
+            group_pid[g] = pid
+            evs.append({"ph": "M", "pid": pid, "ts": 0,
+                        "name": "process_name", "args": {"name": g}})
+            evs.append({"ph": "M", "pid": pid, "ts": 0,
+                        "name": "process_sort_index",
+                        "args": {"sort_index": pid}})
+        evs.append({"ph": "M", "pid": group_pid[g], "tid": nid, "ts": 0,
+                    "name": "thread_name",
+                    "args": {"name": f"{tel.node_names[nid]} "
+                                     f"({tel.node_ops[nid]})"}})
+    for nid, state, t0, t1 in tel.intervals:
+        if state == ST_INACTIVE:
+            continue
+        evs.append({"ph": "X", "pid": group_pid[tel.node_groups[nid]],
+                    "tid": nid, "ts": t0, "dur": t1 - t0,
+                    "name": STATE_NAMES[state],
+                    "cat": "fire" if state == ST_FIRED else "stall"})
+    return evs
+
+
+def _link_events(tel: Telemetry) -> list[dict]:
+    evs: list[dict] = []
+    contended = [lid for lid in range(len(tel.link_names))
+                 if tel.link_stalls[lid] > 0]
+    if contended:
+        evs.append({"ph": "M", "pid": _PID_LINKS, "ts": 0,
+                    "name": "process_name",
+                    "args": {"name": "links (contended)"}})
+    for lid in contended:
+        name = (f"link {tel.link_names[lid]} "
+                f"(stall={int(tel.link_stalls[lid])})")
+        occ = tel.link_occ.get(lid, {})
+        # sample every occupied slot, and drop back to 0 when a busy slot's
+        # successor is idle, so the counter reads as per-cycle occupancy
+        samples: dict[int, int] = {}
+        for slot, words in occ.items():
+            samples[slot] = words
+        for slot in list(samples):
+            if slot + 1 not in samples:
+                samples[slot + 1] = 0
+        for slot in sorted(samples):
+            evs.append({"ph": "C", "pid": _PID_LINKS, "ts": slot,
+                        "name": name, "args": {"words": samples[slot]}})
+    return evs
+
+
+def _span_events(tel: Telemetry) -> list[dict]:
+    evs: list[dict] = []
+    tracks: dict[str, int] = {}
+    if tel.spans:
+        evs.append({"ph": "M", "pid": _PID_SPANS, "ts": 0,
+                    "name": "process_name", "args": {"name": "tuner"}})
+    for sp in tel.spans:
+        track = sp.get("track", "spans")
+        if track not in tracks:
+            tid = len(tracks)
+            tracks[track] = tid
+            evs.append({"ph": "M", "pid": _PID_SPANS, "tid": tid, "ts": 0,
+                        "name": "thread_name", "args": {"name": track}})
+        evs.append({"ph": "X", "pid": _PID_SPANS, "tid": tracks[track],
+                    "ts": int(sp["t0"] * 1e6),
+                    "dur": max(1, int(sp["dur"] * 1e6)),
+                    "name": sp["name"], "cat": sp.get("cat", "span"),
+                    "args": sp.get("args", {})})
+    return evs
+
+
+def trace_events(tel: Telemetry) -> list[dict]:
+    """Flatten the sink into ``trace_event`` dicts, globally ts-sorted
+    (metadata first)."""
+    meta: list[dict] = []
+    evs: list[dict] = []
+    parts = [_span_events(tel)]
+    if tel.attached:
+        parts += [_node_events(tel), _link_events(tel)]
+    for part in parts:
+        for e in part:
+            (meta if e["ph"] == "M" else evs).append(e)
+    evs.sort(key=lambda e: (e["ts"], e.get("pid", 0), e.get("tid", 0)))
+    return meta + evs
+
+
+def write_trace(tel: Telemetry, path: str) -> dict:
+    """Write the Perfetto JSON trace; returns the written object."""
+    obj = {"traceEvents": trace_events(tel),
+           "displayTimeUnit": "ms",
+           "metadata": {"tool": "repro.telemetry",
+                        "run": tel.run_label,
+                        "cycles": tel.cycles,
+                        "clock": "1 cycle = 1 us (sim tracks); "
+                                 "wall us (tuner spans)"}}
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=0, sort_keys=True)
+        f.write("\n")
+    return obj
+
+
+def validate_trace(obj: dict | list) -> int:
+    """Schema check: required keys per phase, integer non-negative
+    timestamps, non-negative durations, and monotonic (ts-sorted) event
+    order.  Returns the number of non-metadata events; raises ValueError
+    on the first violation."""
+    evs = obj["traceEvents"] if isinstance(obj, dict) else obj
+    last_ts = None
+    n = 0
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph not in ("M", "X", "C", "B", "E", "i", "I"):
+            raise ValueError(f"event {i}: unknown phase {ph!r}")
+        if "pid" not in e or "name" not in e:
+            raise ValueError(f"event {i}: missing pid/name: {e}")
+        ts = e.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            raise ValueError(f"event {i}: bad ts {ts!r} (want int >= 0)")
+        if ph == "M":
+            continue
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                raise ValueError(f"event {i}: bad dur {dur!r}")
+        if ph == "C" and "args" not in e:
+            raise ValueError(f"event {i}: counter without args")
+        if last_ts is not None and ts < last_ts:
+            raise ValueError(
+                f"event {i}: timestamps not monotonic ({ts} < {last_ts})")
+        last_ts = ts
+        n += 1
+    return n
