@@ -1,26 +1,84 @@
-"""Compare two BENCH_*.json perf snapshots with per-kind tolerances.
+"""Compare BENCH_*.json perf snapshots — pairwise or against the history.
+
+Snapshot mode (two artifacts)::
 
     python benchmarks/bench_diff.py OLD.json NEW.json [--rtol 0.25] ...
 
-The artifacts' deterministic counters (cycle counts, token hops, stall
-cycles, fire/instruction counts — anything integer-valued) must match
-**exactly**: the simulator is bit-reproducible, so any drift there is a
-semantics change, not noise.  Float-valued keys (wall times, GFLOPS,
-speedups) are machine-load measurements and compare under ``--rtol``/
-``--atol``.  ``ci.sh`` uses this as the telemetry-overhead gate: the
-refreshed BENCH_pr4 must keep identical cycle counts and wall times within
-tolerance of the previous snapshot (telemetry detached = free).
+Trend mode (one artifact vs the append-only ``BENCH_history.jsonl``)::
 
-Exit status: 0 when every shared case agrees, 1 on any violation (or on a
-schema/config mismatch — comparing a smoke run against a full run is
-meaningless).  Cases or keys present on only one side are reported as
-warnings unless ``--strict`` makes them failures.
+    python benchmarks/bench_diff.py NEW.json --trend 5 [--history PATH]
+
+Cases are flattened to dotted key paths (``best.cycles`` — the same
+:func:`repro.telemetry.metrics.flatten_case` rule the history records use)
+and compared on the **intersection** of keys; keys present on only one side
+warn (``--strict`` fails), so artifacts are free to *grow* fields across
+PRs without breaking the gate.  Two exceptions:
+
+* each schema has an explicit **allowlist of required integer counters**
+  (``REQUIRED_COUNTERS``) that must exist on both sides and match exactly —
+  a snapshot that silently *lost* its cycle counts is a broken refresh, not
+  a schema evolution;
+* each schema has a **volatile** prefix set (``VOLATILE``) that is skipped
+  entirely — e.g. the BENCH_pr5 explore artifacts carry the whole Pareto
+  ``front``, cache ``stats`` and prune tallies, which legitimately change
+  whenever the search trajectory does.
+
+Everything else integer-valued must match exactly (the simulator is
+bit-reproducible; integer drift is a semantics change, not noise).
+Float-valued keys (wall times, GFLOPS) are machine-load measurements and
+compare under ``--rtol``/``--atol``.
+
+Trend mode gates each required counter of NEW against the last ``N``
+history records of the same (schema, config, case): **fail** when the new
+value is worse (greater) than *every* one of them — i.e. worse than
+``max(last N)`` — warn when it merely changed vs the most recent record
+but stays inside the envelope (so a blessed regression doesn't re-fire
+forever).  Walls only warn in trend mode (``overhead_check.py`` owns the
+wall-clock gate).  A case with no history yet passes with a warning —
+the first CI run seeds the trend.
+
+Exit status: 0 when every check passes, 1 on any failure (including a
+schema/config mismatch or a partial artifact with an ``errors`` key).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
+
+try:
+    from repro.telemetry.metrics import (DEFAULT_HISTORY, case_records,
+                                         flatten_case, history_for,
+                                         load_history, trend_values)
+except ImportError:                        # ran bare: python benchmarks/...
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "src"))
+    from repro.telemetry.metrics import (DEFAULT_HISTORY, case_records,
+                                         flatten_case, history_for,
+                                         load_history, trend_values)
+
+#: integer counters that must exist on both sides and match exactly —
+#: per artifact schema; unknown schemas fall back to "no required set".
+REQUIRED_COUNTERS = {
+    "bench_pr2/v1": ("cycles_ideal", "cycles_routed", "pe_instructions",
+                     "stall_cycles", "token_hops"),
+    "bench_pr3/v1": ("cycles_fused_ideal", "cycles_fused_routed",
+                     "cycles_separate_ideal", "cycles_separate_routed",
+                     "pe_instructions", "stall_cycles", "token_hops",
+                     "max_channel_load"),
+    "bench_pr4/v1": ("cycles_ideal", "cycles_routed", "pe_instructions",
+                     "stall_cycles", "token_hops"),
+    "bench_pr5/v1": ("analytic.cycles", "best.cycles", "best.pes",
+                     "best.max_channel_load"),
+}
+
+#: dotted-path prefixes skipped per schema: legitimately trajectory-
+#: dependent structure (Pareto fronts, cache stats, prune tallies).
+VOLATILE = {
+    "bench_pr5/v1": ("front", "stats.", "pruned.", "n_points",
+                     "analytic.cached", "best.cached"),
+}
 
 
 def _is_int(v) -> bool:
@@ -31,13 +89,19 @@ def _is_num(v) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool)
 
 
+def _volatile(schema: str, key: str) -> bool:
+    return any(key == p or key.startswith(p)
+               for p in VOLATILE.get(schema, ()))
+
+
 def diff_cases(old: dict, new: dict, rtol: float, atol: float,
-               skip: frozenset[str] = frozenset(),
-               float_keys: frozenset[str] = frozenset()):
+               schema: str = "", skip: frozenset = frozenset(),
+               float_keys: frozenset = frozenset()):
     """Yield ``(kind, message)`` findings; kind is 'fail' or 'warn'.
 
     ``float_keys`` forces tolerance-compare on keys that would otherwise be
     integer-exact (e.g. a counter known to be load-dependent)."""
+    required = REQUIRED_COUNTERS.get(schema, ())
     for name in sorted(old.keys() | new.keys()):
         if name not in new:
             yield "warn", f"case {name!r} only in OLD"
@@ -45,11 +109,18 @@ def diff_cases(old: dict, new: dict, rtol: float, atol: float,
         if name not in old:
             yield "warn", f"case {name!r} only in NEW"
             continue
-        a, b = old[name], new[name]
+        a, b = flatten_case(old[name]), flatten_case(new[name])
+        for key in required:
+            for side, d in (("OLD", a), ("NEW", b)):
+                if key not in d:
+                    yield ("fail", f"{name}.{key}: required counter missing "
+                           f"in {side} (allowlist for {schema})")
         for key in sorted(a.keys() | b.keys()):
-            if key in skip:
+            if key in skip or _volatile(schema, key):
                 continue
             if key not in b or key not in a:
+                if key in required:
+                    continue               # already failed above
                 side = "OLD" if key in a else "NEW"
                 yield "warn", f"{name}.{key} only in {side}"
                 continue
@@ -70,10 +141,75 @@ def diff_cases(old: dict, new: dict, rtol: float, atol: float,
                            f"at rtol={rtol} atol={atol})")
 
 
+def trend_findings(artifact: dict, history: list[dict], last: int,
+                   rtol: float, atol: float):
+    """Yield ``(kind, message)`` gating ``artifact`` against the last
+    ``last`` matching history records per case (see module docstring)."""
+    schema = artifact.get("schema", "?")
+    config = artifact.get("config", "?")
+    required = REQUIRED_COUNTERS.get(schema, ())
+    for rec in case_records(artifact):
+        case = rec["case"]
+        line = history_for(history, schema, config, case)
+        if not line:
+            yield ("warn", f"{case}: no history for ({schema}, {config}) — "
+                   f"first record seeds the trend")
+            continue
+        for key in required:
+            if key not in rec["counters"]:
+                yield ("fail", f"{case}.{key}: required counter missing "
+                       f"in NEW (allowlist for {schema})")
+                continue
+            recent = trend_values(line, key, last=last)
+            if not recent:
+                yield "warn", f"{case}.{key}: no history values yet"
+                continue
+            nv, worst = rec["counters"][key], max(recent)
+            if nv > worst:
+                yield ("fail", f"{case}.{key}: regression {nv} > "
+                       f"max(last {len(recent)}) = {worst} "
+                       f"(trend {recent} -> {nv})")
+            elif nv != recent[-1]:
+                yield ("warn", f"{case}.{key}: changed {recent[-1]} -> {nv} "
+                       f"(within envelope, max(last {len(recent)}) = "
+                       f"{worst})")
+        for key, nv in sorted(rec["walls"].items()):
+            recent = trend_values(line, key, last=last, kind="walls")
+            if not recent:
+                continue
+            med = sorted(recent)[len(recent) // 2]
+            lim = med * (1 + rtol) + atol
+            if nv > lim:
+                yield ("warn", f"{case}.{key}: wall {nv:.4g} above trend "
+                       f"envelope {lim:.4g} (median of last "
+                       f"{len(recent)} = {med:.4g})")
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check_partial(art: dict, side: str) -> list:
+    if art.get("errors"):
+        return [("fail", f"{side} is a partial artifact "
+                 f"(errors on {sorted(art['errors'])})")]
+    return []
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("old", metavar="OLD.json")
-    ap.add_argument("new", metavar="NEW.json")
+    ap.add_argument("old", metavar="OLD.json",
+                    help="previous snapshot, or the NEW artifact in "
+                    "--trend mode")
+    ap.add_argument("new", metavar="NEW.json", nargs="?",
+                    help="refreshed snapshot (omit in --trend mode)")
+    ap.add_argument("--trend", type=int, metavar="N",
+                    help="gate OLD.json against the last N matching "
+                    "history records instead of a second snapshot")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help=f"history file for --trend "
+                    f"(default {DEFAULT_HISTORY})")
     ap.add_argument("--rtol", type=float, default=0.25,
                     help="relative tolerance for float-valued keys "
                     "(wall times etc.; default 0.25)")
@@ -81,7 +217,7 @@ def main(argv: list[str] | None = None) -> int:
                     help="absolute slack added to the tolerance band "
                     "(absorbs sub-tick walls; default 0.05)")
     ap.add_argument("--skip", action="append", default=[], metavar="KEY",
-                    help="ignore this per-case key (repeatable)")
+                    help="ignore this per-case key path (repeatable)")
     ap.add_argument("--float-key", action="append", default=[],
                     metavar="KEY", help="tolerance-compare this integer key "
                     "instead of requiring exact equality (repeatable)")
@@ -90,42 +226,60 @@ def main(argv: list[str] | None = None) -> int:
                     "instead of warning")
     args = ap.parse_args(argv)
 
-    arts = []
-    for path in (args.old, args.new):
+    if (args.new is None) == (args.trend is None):
+        print("bench_diff: need either OLD.json NEW.json or "
+              "NEW.json --trend N", file=sys.stderr)
+        return 2
+
+    try:
+        first = _load(args.old)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: cannot read {args.old}: {e}", file=sys.stderr)
+        return 1
+
+    findings: list[tuple[str, str]] = []
+    if args.trend is not None:
+        findings += _check_partial(first, "NEW")
+        history = load_history(args.history)
+        findings += list(trend_findings(first, history, args.trend,
+                                        args.rtol, args.atol))
+        label = (f"trend gate vs last {args.trend} of "
+                 f"{args.history} ({len(history)} records)")
+        n_cases = len(first.get("cases", {}))
+    else:
         try:
-            with open(path) as f:
-                arts.append(json.load(f))
+            second = _load(args.new)
         except (OSError, ValueError) as e:
-            print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+            print(f"bench_diff: cannot read {args.new}: {e}",
+                  file=sys.stderr)
             return 1
-    old, new = arts
+        for meta in ("schema", "config"):
+            if first.get(meta) != second.get(meta):
+                findings.append(("fail", f"{meta} mismatch: "
+                                 f"{first.get(meta)!r} != "
+                                 f"{second.get(meta)!r}"))
+        findings += _check_partial(first, "OLD")
+        findings += _check_partial(second, "NEW")
+        findings += list(diff_cases(
+            first.get("cases", {}), second.get("cases", {}),
+            args.rtol, args.atol, schema=str(first.get("schema", "")),
+            skip=frozenset(args.skip),
+            float_keys=frozenset(args.float_key)))
+        label = f"snapshot compare (rtol={args.rtol}, atol={args.atol})"
+        n_cases = len(first.get("cases", {}).keys()
+                      & second.get("cases", {}).keys())
+
     fails = 0
-    for meta in ("schema", "config"):
-        if old.get(meta) != new.get(meta):
-            print(f"FAIL: {meta} mismatch: "
-                  f"{old.get(meta)!r} != {new.get(meta)!r}")
-            fails += 1
-    for side, art in (("OLD", old), ("NEW", new)):
-        if art.get("errors"):
-            print(f"FAIL: {side} is a partial artifact "
-                  f"(errors on {sorted(art['errors'])})")
-            fails += 1
-    findings = list(diff_cases(old.get("cases", {}), new.get("cases", {}),
-                               args.rtol, args.atol,
-                               skip=frozenset(args.skip),
-                               float_keys=frozenset(args.float_key)))
     for kind, msg in findings:
         if args.strict and kind == "warn":
             kind = "fail"
         print(f"{kind.upper()}: {msg}")
         fails += kind == "fail"
-    n_cases = len(old.get("cases", {}).keys() & new.get("cases", {}).keys())
     if fails:
-        print(f"bench_diff: {fails} failure(s) across {n_cases} shared "
-              f"case(s)")
+        print(f"bench_diff: {fails} failure(s) across {n_cases} case(s) — "
+              f"{label}")
         return 1
-    print(f"bench_diff: OK — {n_cases} shared case(s) agree "
-          f"(rtol={args.rtol}, atol={args.atol})")
+    print(f"bench_diff: OK — {n_cases} case(s) agree; {label}")
     return 0
 
 

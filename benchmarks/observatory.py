@@ -1,0 +1,158 @@
+"""Trend + attribution reports over the append-only benchmark history.
+
+    python benchmarks/observatory.py append BENCH_pr4.json [more.json ...]
+    python benchmarks/observatory.py report [--last 8]
+
+``append`` turns each BENCH_*.json artifact into fingerprinted records
+(:mod:`repro.telemetry.metrics`) and appends them to ``BENCH_history.jsonl``
+— ci.sh does this once per run, *after* the trend gate has passed, so the
+history only accumulates blessed measurements.
+
+``report`` renders the trajectory: one line per experiment (schema, config,
+case) with the primary cycle counter's trend over the last N records, plus
+— for cases that carry a ``stall_breakdown`` (the PR 8 attribution fields)
+— the latest stall-cause shares, phase split and bottleneck label.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+try:
+    from repro.telemetry.metrics import (DEFAULT_HISTORY, case_records,
+                                         append_history, load_history,
+                                         trend_values)
+except ImportError:                        # ran bare: python benchmarks/...
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "src"))
+    from repro.telemetry.metrics import (DEFAULT_HISTORY, case_records,
+                                         append_history, load_history,
+                                         trend_values)
+
+#: first matching key is the experiment's headline counter
+PRIMARY = ("cycles_routed", "cycles_fused_routed", "best.cycles", "cycles",
+           "cycles_ideal")
+
+_SPARK = "_.-~*#"
+
+
+def _spark(vals: list[int]) -> str:
+    lo, hi = min(vals), max(vals)
+    if hi == lo:
+        return _SPARK[0] * len(vals)
+    return "".join(_SPARK[int((v - lo) / (hi - lo) * (len(_SPARK) - 1))]
+                   for v in vals)
+
+
+def _delta(vals: list) -> str:
+    if len(vals) < 2 or vals[-2] == 0:
+        return ""
+    d = 100.0 * (vals[-1] - vals[-2]) / vals[-2]
+    return f" ({d:+.1f}%)" if abs(d) >= 0.05 else " (=)"
+
+
+def append_cmd(args) -> int:
+    n = 0
+    for path in args.artifacts:
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"observatory: cannot read {path}: {e}", file=sys.stderr)
+            return 1
+        if art.get("errors"):
+            print(f"observatory: refusing to append partial artifact "
+                  f"{path} (errors on {sorted(art['errors'])})",
+                  file=sys.stderr)
+            return 1
+        recs = case_records(art, source=pathlib.Path(path).name)
+        n += append_history(args.history, recs)
+        print(f"observatory: {path}: appended {len(recs)} record(s)")
+    print(f"observatory: {args.history}: +{n} record(s)")
+    return 0
+
+
+def _attribution_lines(rec: dict) -> list[str]:
+    """Latest attribution view of one record, if it carries the fields."""
+    counters = rec.get("counters", {})
+    bd = {k.split(".", 1)[1]: v for k, v in counters.items()
+          if k.startswith("stall_breakdown.")}
+    ph = {k.split(".", 1)[1]: v for k, v in counters.items()
+          if k.startswith("phases.")}
+    out = []
+    if ph:
+        tot = max(1, sum(ph.values()))
+        out.append("      phases: " + "  ".join(
+            f"{k}={v} ({100 * v / tot:.0f}%)" for k, v in ph.items()))
+    if bd:
+        tot = sum(bd.values())
+        if tot:
+            out.append("      stalls: " + "  ".join(
+                f"{k}={100 * v / tot:.0f}%"
+                for k, v in sorted(bd.items(), key=lambda kv: -kv[1])
+                if v))
+        else:
+            out.append("      stalls: none recorded")
+    label = rec.get("meta", {}).get("bottleneck")
+    if label:
+        out.append(f"      bottleneck: {label}")
+    return out
+
+
+def report_cmd(args) -> int:
+    records = load_history(args.history)
+    if not records:
+        print(f"observatory: {args.history}: no records yet — run "
+              f"`observatory.py append BENCH_*.json` first")
+        return 0
+    lines = {}
+    for r in records:
+        key = (r.get("schema", "?"), r.get("config", "?"),
+               r.get("case", "?"))
+        lines.setdefault(key, []).append(r)
+    print(f"observatory: {args.history} — {len(records)} record(s), "
+          f"{len(lines)} experiment(s), last {args.last} shown per trend")
+    last_group = None
+    for (schema, config, case), recs in sorted(lines.items()):
+        if (schema, config) != last_group:
+            last_group = (schema, config)
+            print(f"{schema} [{config}]")
+        key = next((k for k in PRIMARY if k in recs[-1].get("counters", {})),
+                   None)
+        if key is None:
+            print(f"  {case:<22} ({len(recs)} record(s), no primary "
+                  f"counter)")
+            continue
+        vals = trend_values(recs, key, last=args.last)
+        print(f"  {case:<22} {key}: {vals[-1]}{_delta(vals)}  "
+              f"|{_spark(vals)}| min {min(vals)} max {max(vals)} "
+              f"n={len(vals)}")
+        if args.attribution:
+            for ln in _attribution_lines(recs[-1]):
+                print(ln)
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    a = sub.add_parser("append", help="append artifact cases to the history")
+    a.add_argument("artifacts", nargs="+", metavar="BENCH.json")
+    a.add_argument("--history", default=DEFAULT_HISTORY)
+    a.set_defaults(fn=append_cmd)
+    r = sub.add_parser("report", help="render the trend/attribution report")
+    r.add_argument("--history", default=DEFAULT_HISTORY)
+    r.add_argument("--last", type=int, default=8,
+                   help="trend window per experiment (default 8)")
+    r.add_argument("--no-attribution", dest="attribution",
+                   action="store_false",
+                   help="skip the per-case stall/phase/bottleneck lines")
+    r.set_defaults(fn=report_cmd)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,112 @@
+"""Disabled-telemetry overhead gate: the ``telemetry=None`` path must not
+creep.
+
+    python benchmarks/overhead_check.py [--rtol 0.02] [--history PATH]
+
+The telemetry contract (docs/telemetry.md) is *zero cost when absent*: with
+``telemetry=None`` both engines take one ``is not None`` branch per probe
+site and nothing else.  A single process cannot compare against a build
+with the hooks compiled out, so this check gates the **trajectory**: it
+times the routed smoke 2d case (vector engine, telemetry detached,
+best-of-``--repeats`` wall so scheduler noise drops out) and fails when
+that wall exceeds the median of its own last ``--last`` history records by
+more than ``--rtol`` (default 2% — the documented overhead bound) plus
+``--atol`` seconds of absolute slack.  On pass, the fresh measurement is
+appended (schema ``overhead/v1``) so the envelope tracks the machine; the
+first run on an empty history seeds it and passes trivially.
+
+Exit status: 0 on pass, 1 when the wall breaches the envelope.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+try:
+    from repro.telemetry.metrics import (DEFAULT_HISTORY, append_history,
+                                         case_records, history_for,
+                                         load_history, trend_values)
+except ImportError:                        # ran bare: python benchmarks/...
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "src"))
+    from repro.telemetry.metrics import (DEFAULT_HISTORY, append_history,
+                                         case_records, history_for,
+                                         load_history, trend_values)
+
+SCHEMA = "overhead/v1"
+CASE = "2d_routed_vector"
+
+
+def measure(repeats: int) -> tuple[float, int]:
+    """Best-of-``repeats`` wall of the routed smoke 2d case with the sink
+    detached (fresh plan per repeat: edge queues are runtime state)."""
+    import numpy as np
+
+    from repro.core import CGRA, map_2d, simulate
+    from repro.core.spec import paper_stencil_2d
+    from repro.fabric import FabricTopology, place, route
+
+    spec = paper_stencil_2d(ny=30, nx=48, r=12)
+    x = np.random.default_rng(0).normal(size=spec.grid_shape)
+    topo = FabricTopology.mesh(16, 16)
+    best, cycles = float("inf"), 0
+    for _ in range(repeats):
+        plan = map_2d(spec, workers=8)
+        rf = route(place(plan, topo, seed=0))
+        t0 = time.perf_counter()
+        res = simulate(plan, x, CGRA, fabric=rf, engine="vector",
+                       telemetry=None)
+        best = min(best, time.perf_counter() - t0)
+        cycles = res.cycles
+    return best, cycles
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", default=DEFAULT_HISTORY)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--last", type=int, default=10,
+                    help="history window for the median (default 10)")
+    ap.add_argument("--rtol", type=float, default=0.02,
+                    help="allowed relative creep over the trend median "
+                    "(default 0.02 = the documented <2%% bound)")
+    ap.add_argument("--atol", type=float, default=0.05,
+                    help="absolute slack in seconds (absorbs timer "
+                    "granularity on sub-second walls; default 0.05)")
+    ap.add_argument("--no-append", action="store_true",
+                    help="gate only; don't record this measurement")
+    args = ap.parse_args(argv)
+
+    wall, cycles = measure(args.repeats)
+    history = history_for(load_history(args.history), SCHEMA, "smoke", CASE)
+    recent = trend_values(history, "wall_s", last=args.last, kind="walls")
+
+    status = 0
+    if recent:
+        med = sorted(recent)[len(recent) // 2]
+        lim = med * (1 + args.rtol) + args.atol
+        verdict = "OK" if wall <= lim else "FAIL"
+        print(f"overhead_check: {verdict} — telemetry=None wall "
+              f"{wall:.4f}s vs envelope {lim:.4f}s (median of last "
+              f"{len(recent)} = {med:.4f}s, rtol={args.rtol}, "
+              f"atol={args.atol}; {cycles} cycles)")
+        status = 0 if wall <= lim else 1
+    else:
+        print(f"overhead_check: OK — first measurement seeds the trend "
+              f"({wall:.4f}s, {cycles} cycles)")
+
+    if status == 0 and not args.no_append:
+        art = {"schema": SCHEMA, "config": "smoke",
+               "cases": {CASE: {"cycles": cycles,
+                                "wall_s": round(wall, 4),
+                                "engine": "vector",
+                                "repeats": args.repeats}}}
+        append_history(args.history, case_records(
+            art, source="overhead_check.py"))
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -156,6 +156,20 @@ def _artifact_case(cases, name, spec, mapper, w, topo, base, engine):
         _assert_engines_agree(name, (ideal, routed), (vi, vr))
         cases[name]["sim_wall_s_vector"] = round(vwi + vwr, 3)
         cases[name]["vector_speedup"] = round(wall_s / (vwi + vwr), 2)
+    # attribution fields (PR 8): one extra routed run with a counter-only
+    # telemetry sink, after the timed runs so the walls stay uninstrumented
+    from repro.core import CGRA, simulate
+    from repro.fabric import place, route
+    from repro.telemetry import Telemetry, attribute
+    plan_a = mk()
+    rfa = route(place(plan_a, topo, seed=0))
+    mtel = Telemetry(timeline=False)
+    res_a = simulate(plan_a, x, CGRA, fabric=rfa, engine="vector",
+                     telemetry=mtel)
+    acct = attribute(mtel, res_a)
+    cases[name]["stall_breakdown"] = dict(acct.causes)
+    cases[name]["phases"] = dict(acct.phases)
+    cases[name]["bottleneck"] = acct.bottleneck
 
 
 def program_artifact_cases(smoke: bool, engine: str = "interp",
@@ -399,6 +413,11 @@ def explore_artifact_cases(smoke: bool, case: str | None = None,
               f"misses={cs['misses']} "
               f"failures_replayed={cs['failures_replayed']} "
               f"entries={cs['entries']}", file=sys.stderr)
+        # the "why": attribution labels on the measured best vs the baseline
+        print(f"explore[{name}]: best {best.cycles} cycles "
+              f"[{best.bottleneck or 'unlabelled'}] vs analytic "
+              f"{analytic.cycles} [{analytic.bottleneck or 'unlabelled'}]",
+              file=sys.stderr)
         cases[name] = {
             **{k: v for k, v in res.to_json().items() if k != "failures"},
             "n_failures": len(res.failures),
@@ -541,6 +560,10 @@ def main(argv: list[str] | None = None) -> None:
                     "'both' cross-validates and records per-engine walls")
     ap.add_argument("--case", metavar="NAME",
                     help="restrict artifacts to one named case")
+    ap.add_argument("--history", metavar="PATH",
+                    help="append fingerprinted records for every artifact "
+                    "written this run to this BENCH_history.jsonl "
+                    "(ci.sh appends only after its trend gate passes)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grids (fast CI configuration)")
     ap.add_argument("--artifact-only", action="store_true",
@@ -570,23 +593,27 @@ def main(argv: list[str] | None = None) -> None:
                 print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
                 traceback.print_exc(file=sys.stderr)
 
+    written: list[str] = []
     for path, writer in ((args.artifact, write_artifact),
                          (args.program_artifact, write_program_artifact)):
         if path:
             try:
                 writer(path, args.smoke, args.engine, args.case)
+                written.append(path)
             except Exception:
                 failed += 1
                 traceback.print_exc(file=sys.stderr)
     if args.engine_artifact:
         try:
             write_engine_artifact(args.engine_artifact, args.smoke, args.case)
+            written.append(args.engine_artifact)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)
     if args.explore:
         try:
             write_explore_artifact(args.explore, args.smoke, args.case)
+            written.append(args.explore)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)
@@ -596,6 +623,17 @@ def main(argv: list[str] | None = None) -> None:
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)
+    if args.history and written:
+        # only complete artifacts enter the trajectory (partial refreshes
+        # never reached `written`); ci.sh orders this after its trend gate
+        from repro.telemetry.metrics import append_history, case_records
+        n = 0
+        for path in written:
+            with open(path) as f:
+                art = json.load(f)
+            n += append_history(args.history, case_records(
+                art, source=pathlib.Path(path).name))
+        print(f"appended {n} record(s) to {args.history}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

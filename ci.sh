@@ -1,26 +1,28 @@
 #!/usr/bin/env bash
 # Tier-1 verify gate (see ROADMAP.md) — one command for CI and local use.
-# Runs the test suite (includes the interp-vs-vector engine cross-validation
-# in tests/test_engine.py; the property sweep runs under hypothesis when
-# installed — see requirements-dev.txt — and under the in-tree
-# repro.testing.minihyp shim otherwise, so it never skips), then refreshes
-# the perf-trajectory artifacts (BENCH_pr2.json single-op mappings,
-# BENCH_pr3.json program pipelines, BENCH_pr4.json interpreter-vs-vector
-# engine comparison, BENCH_pr5.json mapping auto-tuner Pareto fronts) in
-# the fast smoke configuration.  --engine both makes the pr2/pr3 refresh
-# itself a drift gate: it fails if the vector engine's cycles/fires/outputs
-# diverge from the interpreter's; the pr5 refresh asserts every front is
-# non-dominated and the tuner's best never loses to the analytical §VI
-# baseline (tuner evals cache in BENCH_pr5.json.cache, so reruns are cheap).
 #
-# The refresh also emits a Perfetto trace artifact for one routed smoke case
-# (--trace; validated, open in ui.perfetto.dev) and then gates the refreshed
-# BENCH_pr4 against the previous snapshot with benchmarks/bench_diff.py:
-# every deterministic counter (cycles, token hops, stalls) must be identical
-# — the telemetry hooks are opt-in and a detached sink must not perturb the
-# simulation — and wall times must stay within a generous machine-noise
-# tolerance (the disabled-telemetry overhead bound; the precise <2% claim is
-# measured in docs/telemetry.md).
+# 1. pytest: the full suite (includes the interp-vs-vector engine
+#    cross-validation; the property sweep runs under hypothesis when
+#    installed and under the in-tree repro.testing.minihyp shim otherwise).
+# 2. Artifact refresh (smoke configuration): BENCH_pr2 single-op mappings,
+#    BENCH_pr3 program pipelines, BENCH_pr4 interp-vs-vector engine
+#    comparison, BENCH_pr5 auto-tuner Pareto fronts, plus a validated
+#    Perfetto trace for one routed case.  --engine both makes the refresh
+#    itself a drift gate (identical cycles/fires/outputs across engines);
+#    the pr5 refresh asserts non-dominated fronts and tuner-best <=
+#    analytical baseline.
+# 3. Snapshot gate: the refreshed BENCH_pr4 vs the committed one —
+#    deterministic counters exact, walls within machine-noise tolerance.
+# 4. Trend gate: every refreshed artifact vs the last 5 records of
+#    BENCH_history.jsonl (benchmarks/bench_diff.py --trend).  The gate runs
+#    BEFORE the append on purpose: appending first would make every run
+#    its own baseline and the gate vacuous.
+# 5. Overhead gate: benchmarks/overhead_check.py re-times the routed smoke
+#    2d case with telemetry=None and fails if the wall creeps >2% above
+#    the rolling history median — the disabled-telemetry bound from
+#    docs/telemetry.md as an explicit failing check.
+# 6. History append + observatory report: the blessed measurements join
+#    BENCH_history.jsonl and the trend/attribution report renders.
 set -euo pipefail
 cd "$(dirname "$0")"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
@@ -37,3 +39,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 
 python benchmarks/bench_diff.py "$prev_pr4" BENCH_pr4.json \
     --rtol 0.5 --atol 0.1
+
+for art in BENCH_pr2.json BENCH_pr3.json BENCH_pr4.json BENCH_pr5.json; do
+    python benchmarks/bench_diff.py "$art" --trend 5 \
+        --history BENCH_history.jsonl
+done
+
+python benchmarks/overhead_check.py --history BENCH_history.jsonl
+
+python benchmarks/observatory.py append BENCH_pr2.json BENCH_pr3.json \
+    BENCH_pr4.json BENCH_pr5.json --history BENCH_history.jsonl
+python benchmarks/observatory.py report --history BENCH_history.jsonl

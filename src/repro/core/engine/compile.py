@@ -283,10 +283,20 @@ def compile_plan(plan, fabric: "RoutedFabric | None" = None) -> CompiledPlan:
             cap[e.eid] = e.capacity
     min_caps = getattr(plan, "min_capacities", None) or {}
     hint = {e.eid: min_caps.get(id(e), 0) for e in edges}
-    # presize rings to twice the analytic minimum occupancy (network skew can
-    # exceed the ideal-mode bound); unbounded rings regrow on demand anyway.
+    # presize rings to the analytic minimum occupancy plus the edge's routed
+    # transit depth (hops), with headroom: a token spends `hops` cycles in
+    # link buffers before it is consumable, so routed steady-state occupancy
+    # exceeds the ideal-mode bound by exactly that much.  Unbounded rings
+    # regrow on demand anyway, so this only trims reallocation churn.
+    if fabric is not None:
+        from repro.fabric.route import edge_key
+        hop = {e.eid: len(fabric.routes.get(edge_key(e), ()))
+               for e in edges}
+    else:
+        hop = {e.eid: 0 for e in edges}
     phys0 = np.array(
-        [min(cap[e.eid], max(16, 2 * hint[e.eid])) for e in edges] + [1],
+        [min(cap[e.eid], max(16, 2 * hint[e.eid] + hop[e.eid]))
+         for e in edges] + [1],
         dtype=np.int64)
 
     # static execute order: memory ops first (rotated at runtime), then the

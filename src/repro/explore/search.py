@@ -54,6 +54,7 @@ class EvalPoint:
     routed: bool
     cached: bool = False
     sim_cycles: int = 0                   # raw cycles of the simulate() call
+    bottleneck: str = ""                  # attribution label ("" = unknown)
 
     def objectives(self) -> tuple[int, int, int]:
         return (self.cycles, self.pes, self.max_channel_load)
@@ -63,7 +64,7 @@ class EvalPoint:
                 "cycles": self.cycles, "pes": self.pes,
                 "max_channel_load": self.max_channel_load,
                 "gflops": round(self.gflops, 3), "routed": self.routed,
-                "cached": self.cached}
+                "cached": self.cached, "bottleneck": self.bottleneck}
 
 
 @dataclasses.dataclass
@@ -132,7 +133,8 @@ def _point_from_cache(cfg: MappingConfig, ent: dict,
     return EvalPoint(config=cfg, cycles=ent["cycles"], pes=ent["pes"],
                      max_channel_load=ent["chan"], gflops=ent["gflops"],
                      routed=routed, cached=True,
-                     sim_cycles=ent["sim_cycles"])
+                     sim_cycles=ent["sim_cycles"],
+                     bottleneck=ent.get("bottleneck", ""))
 
 
 def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
@@ -145,7 +147,7 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
     mode = "routed" if routed else "ideal"
 
     def span(outcome: str, *, cached: bool = False,
-             cycles: int | None = None) -> None:
+             cycles: int | None = None, bottleneck: str = "") -> None:
         """One structured span per evaluation into the telemetry sink —
         exported as a search-timeline trace (docs/telemetry.md)."""
         if tel is None:
@@ -155,7 +157,7 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
         tel.span(f"{mode} {key[:10]}", cat="tuner", track=f"search/{mode}",
                  t0=tel.now() - el, dur=el, key=key, phase=mode,
                  config=cfg.canonical(), outcome=outcome, cached=cached,
-                 cycles=cycles,
+                 cycles=cycles, bottleneck=bottleneck,
                  evals_remaining=(None if b.max_evals is None
                                   else b.max_evals - state.evals),
                  sim_cycles_remaining=(None if b.max_sim_cycles is None
@@ -195,7 +197,8 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
         if reason is not None:
             fail(reason)
             return None
-        from repro.fabric import PlacementError, RouteError, place, route
+        from repro.fabric import (PlacementError, RouteError,
+                                  apply_routed_capacities, place, route)
         try:
             placement = place(plan, topo, seed=cfg.place_seed,
                               restarts=cfg.place_restarts)
@@ -203,11 +206,18 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
         except (PlacementError, RouteError) as e:
             fail(f"place/route: {e}")
             return None
+        if cfg.capacity == "auto":
+            # routed auto-capacity: grow the analytic minima by each edge's
+            # routed hop depth — ideal minima back-pressure on long routes
+            apply_routed_capacities(rf)
 
+    from repro.telemetry import Telemetry, attribute
+    mtel = Telemetry(timeline=False)      # counters only: cheap attribution
     x = target.make_input(plan)
     try:
         res = simulate(plan, x, machine, engine=engine, fabric=rf,
-                       max_cycles=state.budget.sim_max_cycles)
+                       max_cycles=state.budget.sim_max_cycles,
+                       telemetry=mtel)
     except SimDeadlock as e:
         state.charge(e.cycles)            # the cycles burnt before giving up
         fail(f"{'timeout' if e.timed_out else 'deadlock'}: {e}")
@@ -215,6 +225,7 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
     state.charge(res.cycles)
     if verify:
         target.verify(plan, cfg, x, res)
+    bottleneck = attribute(mtel, res).bottleneck
 
     pt = EvalPoint(
         config=cfg,
@@ -223,11 +234,12 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
         else len(plan.dfg.nodes),
         max_channel_load=(rf.stats()["max_channel_load"]
                           if rf is not None else 0),
-        gflops=res.gflops, routed=routed, sim_cycles=res.cycles)
+        gflops=res.gflops, routed=routed, sim_cycles=res.cycles,
+        bottleneck=bottleneck)
     cache.put(key, {"cycles": pt.cycles, "pes": pt.pes,
                     "chan": pt.max_channel_load, "gflops": pt.gflops,
-                    "sim_cycles": pt.sim_cycles})
-    span("measured", cycles=res.cycles)
+                    "sim_cycles": pt.sim_cycles, "bottleneck": pt.bottleneck})
+    span("measured", cycles=res.cycles, bottleneck=bottleneck)
     return pt
 
 
@@ -271,9 +283,13 @@ def explore(target, machine: Machine, *,
     skipped: list[MappingConfig] = []
     # sim_max_cycles is part of the scope: a timeout under a small budget
     # must not be replayed from cache as a failure under a bigger one
+    # capacity_model names the queue-sizing policy measured evals ran under
+    # (hop/v1 = routed auto-capacity grows minima by hop depth); bumping it
+    # invalidates cached evals taken under the older sizing.
     base_scope = {"target": target.signature(),
                   "machine": _machine_sig(machine), "engine": engine,
-                  "sim_max_cycles": budget.sim_max_cycles}
+                  "sim_max_cycles": budget.sim_max_cycles,
+                  "capacity_model": "hop/v1"}
 
     # ----- stage 1: ideal-mode sweep ----------------------------------------
     scope = {**base_scope, "mode": "ideal"}

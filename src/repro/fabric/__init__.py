@@ -11,11 +11,13 @@ Pipeline (docs/fabric.md):
 from repro.fabric.topology import (Coord, FabricTopology, Link, LinkKey, PE,
                                    op_class)
 from repro.fabric.place import Placement, PlacementError, edge_traffic, place
-from repro.fabric.route import (EdgeKey, RoutedFabric, RouteError, edge_key,
-                                route, xy_route)
+from repro.fabric.route import (EdgeKey, RoutedFabric, RouteError,
+                                apply_routed_capacities, edge_key, route,
+                                xy_route)
 from repro.fabric.config import placed_assembly, placed_dot, route_string
 
 __all__ = ["Coord", "FabricTopology", "Link", "LinkKey", "PE", "op_class",
            "Placement", "PlacementError", "edge_traffic", "place",
-           "EdgeKey", "RoutedFabric", "RouteError", "edge_key", "route",
-           "xy_route", "placed_assembly", "placed_dot", "route_string"]
+           "EdgeKey", "RoutedFabric", "RouteError", "apply_routed_capacities",
+           "edge_key", "route", "xy_route", "placed_assembly", "placed_dot",
+           "route_string"]

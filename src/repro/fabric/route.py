@@ -174,3 +174,35 @@ def route(placement: Placement, *, strict: bool = True) -> RoutedFabric:
                 f"{msg}. Use a larger fabric, more channels/link, or a "
                 f"different placement seed.")
     return rf
+
+
+def apply_routed_capacities(rf: RoutedFabric, *, slack: int = 1) -> int:
+    """Grow every bounded edge's queue capacity by its routed hop depth.
+
+    The ideal-mode minima (``MappingPlan.min_capacities``) assume a token is
+    consumable the cycle after it is produced.  On the routed fabric a token
+    spends ``hops`` extra cycles in per-link transit buffers, and the routed
+    engines count in-flight transit words against the edge's capacity — so an
+    edge sized to the ideal minimum back-pressures (or deadlocks a mux cycle)
+    purely because its route is long.  This rewrites each bounded edge to::
+
+        capacity += hops(edge) + slack
+
+    leaving unbounded edges (``capacity=None``) alone, and returns the number
+    of edges grown.  The mutation is recorded (``DFG.mark_mutated``) so the
+    compiled-engine plan cache re-specializes instead of reusing a stale
+    ring presize.  The tuner applies this automatically for routed
+    evaluations when ``SearchConfig.capacity == "auto"``.
+    """
+    g = rf.placement.plan.dfg
+    grown = 0
+    for e in g.edges():
+        if e.capacity is None:
+            continue
+        hops = len(rf.routes.get(edge_key(e), ()))
+        if hops:
+            e.capacity += hops + slack
+            grown += 1
+    if grown:
+        g.mark_mutated()
+    return grown

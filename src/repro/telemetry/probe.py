@@ -17,7 +17,11 @@ evaluation).  The contract with the engines:
   counts through its event-skip), but both leave identical telemetry: same
   per-node fire timelines, same stall attribution, same per-link bookings.
 
-Every node gets one exclusive state per observed cycle:
+Every node gets one exclusive state per observed cycle.  **This table is
+the canonical stall-state taxonomy** — the engines' classifiers
+(``repro.core.engine.interp``/``vector``), the attribution layer
+(``repro.telemetry.attribution``) and docs/telemetry.md all reference it
+rather than restating it:
 
 ====================  ======================================================
 ``ST_INACTIVE``       retired (addr exhausted / sync emitted / cmp fired)
@@ -25,6 +29,8 @@ Every node gets one exclusive state per observed cycle:
                       count-ticks — the same events the fire counters count)
 ``ST_INPUT_STARVED``  an input queue is empty and nothing is in flight to it
 ``ST_OUTPUT_BLOCKED`` inputs ready but a bounded output queue is full
+                      (for ``imux`` only the pattern-selected input port
+                      counts toward starvation/net-wait)
 ``ST_MEM_ARB``        a load/store with data+space that lost the rotating
                       memory-port arbitration (credit < 1 element this cycle)
 ``ST_NET_WAIT``       input empty but tokens are riding the network toward
@@ -41,8 +47,6 @@ from __future__ import annotations
 import time
 
 import numpy as np
-
-from repro.core.dfg import FLOPS_PER_OP
 
 __all__ = ["Telemetry", "STALL_CAUSES", "STATE_NAMES", "ST_INACTIVE",
            "ST_FIRED", "ST_INPUT_STARVED", "ST_OUTPUT_BLOCKED", "ST_MEM_ARB",
@@ -65,11 +69,13 @@ def format_stall_summary(summary: dict | None) -> str:
     if not summary:
         return ""
     counts = summary.get("cause_counts", {})
+    win = summary.get("window_cycles")
+    tag = f"last {win} cycles" if win else "final cycle"
+    if not any(counts.values()) and not summary.get("nodes"):
+        return f"; stall attribution ({tag}): no stalls recorded"
     head = " ".join(f"{c}={n}" for c, n in counts.items() if n)
     nodes = "; ".join(f"{d['name']}({d['op']}): {d['cause']}"
                       for d in summary.get("nodes", [])[:8])
-    win = summary.get("window_cycles")
-    tag = f"last {win} cycles" if win else "final cycle"
     return f"; stall attribution ({tag}): [{head}] top blocked: {nodes}"
 
 
@@ -122,6 +128,11 @@ class Telemetry:
         self.n_nodes = n
         self.fires_total = np.zeros(n, dtype=np.int64)
         self.stall_totals = np.zeros((n, 4), dtype=np.int64)
+        # fire-timeline envelope (cycle of first/last fire; 0 = never fired)
+        # — kept even with timeline=False so the attribution layer's
+        # fill/drain decomposition works on counter-only sinks
+        self.first_fire = np.zeros(n, dtype=np.int64)
+        self.last_fire = np.zeros(n, dtype=np.int64)
         self._cur_state = np.full(n, -1, dtype=np.int64)
         self._since = np.ones(n, dtype=np.int64)
         self.intervals: list[tuple[int, int, int, int]] = []
@@ -154,7 +165,13 @@ class Telemetry:
     def observe(self, cycle: int, state: np.ndarray) -> None:
         """Record one simulated cycle: ``state[nid]`` is the node's exclusive
         ``ST_*`` code for ``cycle``.  The array is consumed (copied)."""
-        self.fires_total += state == ST_FIRED
+        fired = state == ST_FIRED
+        self.fires_total += fired
+        if fired.any():
+            self.last_fire[fired] = cycle
+            new = fired & (self.first_fire == 0)
+            if new.any():
+                self.first_fire[new] = cycle
         st = self.stall_totals
         for c in range(4):
             st[:, c] += state == ST_INPUT_STARVED + c
@@ -187,6 +204,11 @@ class Telemetry:
     def link_book(self, lid: int, slot: int, waited: int) -> None:
         """One token booked one hop: it crosses link ``lid`` at cycle
         ``slot`` after ``waited`` cycles of store-and-forward contention."""
+        if not 0 <= lid < len(self.link_words):
+            raise ValueError(
+                f"unknown link id {lid} (link inventory has "
+                f"{len(self.link_words)} links — was the sink attached with "
+                f"the fabric the engine is booking against?)")
         self.link_words[lid] += 1
         self.link_stalls[lid] += waited
         if self.timeline:
@@ -214,6 +236,10 @@ class Telemetry:
         """Aggregate view of the probes — must equal the engine's own stats
         bit-for-bit (the parity gate): fires by op, loads/stores/flops from
         per-node fires, token_hops/stall_cycles from per-link bookings."""
+        # imported here, not at module top: the engines import this module's
+        # state constants, so a top-level repro.core import would make
+        # `import repro.telemetry` order-dependent (circular)
+        from repro.core.dfg import FLOPS_PER_OP
         fires: dict[str, int] = {}
         loads = stores = flops = 0
         for nid, op in enumerate(self.node_ops):
@@ -245,6 +271,10 @@ class Telemetry:
         """Per-cause attribution over the last ``window`` cycles (whole run
         when None): cause counts in node-cycles plus the most-stalled nodes.
         This is what ``SimDeadlock`` diagnostics embed."""
+        if not self.attached:           # no run: empty (renders as a stub)
+            return {"window_cycles": None,
+                    "cause_counts": {c: 0 for c in STALL_CAUSES},
+                    "nodes": []}
         if window and self.timeline:
             lo = max(1, self.last_cycle + 1 - window)
             per = np.zeros((self.n_nodes, 4), dtype=np.int64)

@@ -29,6 +29,8 @@ def _shade(frac: float) -> str:
 def utilization_grid(tel: Telemetry) -> str:
     """ASCII fabric heatmap (placed runs) or worker/stage utilization table
     (ideal runs); utilization = fired cycles / simulated cycles."""
+    if not tel.attached:
+        return "utilization: no run attached"
     cyc = max(1, tel.cycles)
     if tel.fabric is not None:
         topo = tel.fabric.topo
@@ -68,6 +70,8 @@ def utilization_grid(tel: Telemetry) -> str:
 def bottleneck_table(tel: Telemetry, k: int = 10) -> str:
     """Top-``k`` stall-attribution table: which nodes lost the most cycles,
     and to what — plus the most contended links."""
+    if not tel.attached:
+        return "bottlenecks: no run attached (no stalls recorded)"
     per = tel.stall_totals
     order = np.argsort(-per.sum(axis=1), kind="stable")[:k]
     lines = [f"top-{k} bottlenecks (stalled cycles by cause; "
@@ -98,7 +102,12 @@ def bottleneck_table(tel: Telemetry, k: int = 10) -> str:
 
 
 def render_report(tel: Telemetry, k: int = 10) -> str:
-    """Full text report: totals, heatmap, bottleneck attribution."""
+    """Full text report: totals, heatmap, bottleneck attribution.  A sink
+    that never observed a run renders a stub instead of raising — report
+    paths run on failure/cleanup codepaths too."""
+    if not tel.attached:
+        return ("telemetry: no run attached — no stalls recorded "
+                f"({len(tel.spans)} span(s))")
     t = tel.totals()
     head = (f"telemetry: {tel.run_label} — {t['cycles']} cycles, "
             f"{t['fires_total']} fires, {t['loads']} loads, "

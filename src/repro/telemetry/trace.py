@@ -63,9 +63,13 @@ def _link_events(tel: Telemetry) -> list[dict]:
     contended = [lid for lid in range(len(tel.link_names))
                  if tel.link_stalls[lid] > 0]
     if contended:
+        # "links" declares the inventory size: validate_trace rejects any
+        # counter sample whose lid falls outside it (a booking against a
+        # link the fabric does not have)
         evs.append({"ph": "M", "pid": _PID_LINKS, "ts": 0,
                     "name": "process_name",
-                    "args": {"name": "links (contended)"}})
+                    "args": {"name": "links (contended)",
+                             "links": len(tel.link_names)}})
     for lid in contended:
         name = (f"link {tel.link_names[lid]} "
                 f"(stall={int(tel.link_stalls[lid])})")
@@ -80,7 +84,8 @@ def _link_events(tel: Telemetry) -> list[dict]:
                 samples[slot + 1] = 0
         for slot in sorted(samples):
             evs.append({"ph": "C", "pid": _PID_LINKS, "ts": slot,
-                        "name": name, "args": {"words": samples[slot]}})
+                        "name": name,
+                        "args": {"words": samples[slot], "lid": lid}})
     return evs
 
 
@@ -137,12 +142,16 @@ def write_trace(tel: Telemetry, path: str) -> dict:
 
 def validate_trace(obj: dict | list) -> int:
     """Schema check: required keys per phase, integer non-negative
-    timestamps, non-negative durations, and monotonic (ts-sorted) event
-    order.  Returns the number of non-metadata events; raises ValueError
-    on the first violation."""
+    timestamps, non-negative durations, monotonic (ts-sorted) event order,
+    no two overlapping *exclusive* intervals (fire/stall slices) on one
+    node track, and every link-counter sample inside the declared link
+    inventory.  Returns the number of non-metadata events; raises
+    ValueError naming the violation on the first one."""
     evs = obj["traceEvents"] if isinstance(obj, dict) else obj
     last_ts = None
     n = 0
+    n_links = None                        # declared by the links process
+    track_end: dict[tuple, int] = {}      # (pid, tid) -> exclusive end ts
     for i, e in enumerate(evs):
         ph = e.get("ph")
         if ph not in ("M", "X", "C", "B", "E", "i", "I"):
@@ -153,13 +162,34 @@ def validate_trace(obj: dict | list) -> int:
         if not isinstance(ts, int) or ts < 0:
             raise ValueError(f"event {i}: bad ts {ts!r} (want int >= 0)")
         if ph == "M":
+            if (e["name"] == "process_name"
+                    and "links" in e.get("args", {})):
+                n_links = e["args"]["links"]
             continue
         if ph == "X":
             dur = e.get("dur")
             if not isinstance(dur, int) or dur < 0:
                 raise ValueError(f"event {i}: bad dur {dur!r}")
-        if ph == "C" and "args" not in e:
-            raise ValueError(f"event {i}: counter without args")
+            if e.get("cat") in ("fire", "stall"):
+                # per-node state slices are exclusive by the telemetry
+                # contract: one state per node per cycle
+                key = (e["pid"], e.get("tid"))
+                end = track_end.get(key)
+                if end is not None and ts < end:
+                    raise ValueError(
+                        f"event {i}: overlapping exclusive intervals on "
+                        f"pid={key[0]} tid={key[1]} ({e['name']!r} starts "
+                        f"at {ts} before the previous slice ends at {end})")
+                track_end[key] = max(end or 0, ts + dur)
+        if ph == "C":
+            if "args" not in e:
+                raise ValueError(f"event {i}: counter without args")
+            lid = e["args"].get("lid")
+            if lid is not None and (n_links is None
+                                    or not 0 <= lid < n_links):
+                raise ValueError(
+                    f"event {i}: unknown link id {lid} (declared link "
+                    f"inventory: {n_links})")
         if last_ts is not None and ts < last_ts:
             raise ValueError(
                 f"event {i}: timestamps not monotonic ({ts} < {last_ts})")

@@ -56,6 +56,8 @@ def assert_tel_identical(case):
     """The parity gate: both engines' sinks hold the same telemetry."""
     (_, ra, ta), (_, rb, tb) = case
     assert np.array_equal(ta.fires_total, tb.fires_total)
+    assert np.array_equal(ta.first_fire, tb.first_fire)
+    assert np.array_equal(ta.last_fire, tb.last_fire)
     assert np.array_equal(ta.stall_totals, tb.stall_totals)
     assert ta.intervals == tb.intervals          # full per-node timelines
     assert np.array_equal(ta.link_words, tb.link_words)
@@ -198,12 +200,82 @@ def test_trace_export_validates(rng, tmp_path):
 def test_validate_trace_rejects_garbage():
     with pytest.raises(ValueError):
         validate_trace({"traceEvents": [{"ph": "X"}]})   # missing keys
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="not monotonic"):
         validate_trace({"traceEvents": [
             {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 5, "dur": 1,
              "cat": "c"},
             {"ph": "X", "name": "b", "pid": 1, "tid": 1, "ts": 4, "dur": 1,
              "cat": "c"}]})                              # non-monotonic
+
+
+def test_trace_routed_program_roundtrip(tmp_path):
+    """Satellite: a routed *program-DAG* run (remux/imux nodes, contended
+    links) exports a trace that round-trips the validator from disk."""
+    prog = two_stage_heat(24, 32)
+    rng = np.random.default_rng(2)
+    ins = {f: rng.normal(size=prog.grid_shape) for f in prog.in_fields}
+    plan = lower(prog, workers=4)
+    fab = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    tel = Telemetry()
+    simulate(plan, plan.pack_inputs(ins), CGRA, fabric=fab,
+             engine="vector", telemetry=tel)
+    path = tmp_path / "prog.trace.json"
+    obj = write_trace(tel, str(path))
+    n = validate_trace(obj)
+    assert n > 0
+    assert validate_trace(json.loads(path.read_text())) == n
+    # the link counter tracks declare their inventory and tag samples
+    evs = obj["traceEvents"]
+    decl = [e for e in evs if e["ph"] == "M"
+            and "links" in e.get("args", {})]
+    assert decl and decl[0]["args"]["links"] == len(tel.link_names)
+    c_lids = {e["args"]["lid"] for e in evs if e["ph"] == "C"}
+    assert c_lids and all(0 <= lid < len(tel.link_names) for lid in c_lids)
+
+
+def test_validate_trace_overlapping_exclusive_intervals():
+    """fire/stall slices on one node track are exclusive by contract;
+    tuner spans (other cats) may legitimately overlap after rounding."""
+    overlap = [
+        {"ph": "X", "name": "fire", "pid": 10, "tid": 0, "ts": 1, "dur": 5,
+         "cat": "fire"},
+        {"ph": "X", "name": "input_starved", "pid": 10, "tid": 0, "ts": 3,
+         "dur": 2, "cat": "stall"}]
+    with pytest.raises(ValueError, match="overlapping exclusive intervals"):
+        validate_trace({"traceEvents": overlap})
+    # same shape on different tracks: fine
+    ok = [dict(overlap[0]), {**overlap[1], "tid": 1}]
+    assert validate_trace({"traceEvents": ok}) == 2
+    # same shape but span-cat events: fine (wall-clock spans can overlap)
+    spans = [{**overlap[0], "cat": "tuner"}, {**overlap[1], "cat": "tuner"}]
+    assert validate_trace({"traceEvents": spans}) == 2
+
+
+def test_validate_trace_unknown_link_id():
+    decl = {"ph": "M", "pid": 2, "ts": 0, "name": "process_name",
+            "args": {"name": "links (contended)", "links": 3}}
+    sample = {"ph": "C", "pid": 2, "ts": 1, "name": "link x",
+              "args": {"words": 1, "lid": 7}}
+    with pytest.raises(ValueError, match="unknown link id 7"):
+        validate_trace({"traceEvents": [decl, sample]})
+    # a sample with no inventory declared at all is just as invalid
+    with pytest.raises(ValueError, match="unknown link id 7"):
+        validate_trace({"traceEvents": [sample]})
+    assert validate_trace({"traceEvents": [
+        decl, {**sample, "args": {"words": 1, "lid": 2}}]}) == 1
+
+
+def test_link_book_rejects_unknown_lid(rng):
+    """The probe itself names the error when an engine books against a
+    link outside the attached fabric's inventory."""
+    spec = paper_stencil_2d(ny=30, nx=48, r=12)
+    plan = map_2d(spec, workers=8)
+    fab = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    tel = Telemetry()
+    simulate(plan, rng.normal(size=(30, 48)), CGRA, fabric=fab,
+             engine="vector", telemetry=tel)
+    with pytest.raises(ValueError, match="unknown link id"):
+        tel.link_book(len(tel.link_names) + 5, slot=1, waited=0)
 
 
 # ---------------------------------------------------------------------------
@@ -372,48 +444,158 @@ def test_run_py_all_good_exits_zero(tmp_path, monkeypatch):
 # ---------------------------------------------------------------------------
 # bench_diff (satellite)
 # ---------------------------------------------------------------------------
-def _art(tmp_path, name, cases):
+def _pr4_case(**over):
+    base = {"cycles_ideal": 189, "cycles_routed": 642,
+            "pe_instructions": 833, "stall_cycles": 716046,
+            "token_hops": 9000, "vector_wall_s": 0.30}
+    base.update(over)
+    return base
+
+
+def _art(tmp_path, name, cases, schema="bench_pr4/v1", config="smoke",
+         **extra):
     p = tmp_path / name
-    p.write_text(json.dumps({"schema": "bench_pr4/v1", "config": "smoke",
-                             "cases": cases}))
+    p.write_text(json.dumps({"schema": schema, "config": config,
+                             "cases": cases, **extra}))
     return str(p)
 
 
 def test_bench_diff(tmp_path, capsys):
     from benchmarks.bench_diff import main as bd
-    base = {"2d": {"cycles_routed": 642, "vector_wall_s": 0.30,
-                   "token_hops": 9000}}
+    base = {"2d": _pr4_case()}
     a = _art(tmp_path, "a.json", base)
     assert bd([a, a]) == 0
 
     # integer counters are exact; float walls get the tolerance band
-    drift = _art(tmp_path, "b.json",
-                 {"2d": {"cycles_routed": 643, "vector_wall_s": 0.30,
-                         "token_hops": 9000}})
+    drift = _art(tmp_path, "b.json", {"2d": _pr4_case(cycles_routed=643)})
     assert bd([a, drift]) == 1
     out = capsys.readouterr().out
     assert "deterministic counter changed 642 -> 643" in out
 
     wall_ok = _art(tmp_path, "c.json",
-                   {"2d": {"cycles_routed": 642, "vector_wall_s": 0.36,
-                           "token_hops": 9000}})
+                   {"2d": _pr4_case(vector_wall_s=0.36)})
     assert bd([a, wall_ok]) == 0
     wall_bad = _art(tmp_path, "d.json",
-                    {"2d": {"cycles_routed": 642, "vector_wall_s": 3.0,
-                            "token_hops": 9000}})
+                    {"2d": _pr4_case(vector_wall_s=3.0)})
     assert bd([a, wall_bad]) == 1
 
     # config mismatch (smoke vs full) is never comparable
-    full = tmp_path / "e.json"
-    full.write_text(json.dumps({"schema": "bench_pr4/v1", "config": "full",
-                                "cases": base}))
-    assert bd([a, str(full)]) == 1
+    full = _art(tmp_path, "e.json", base, config="full")
+    assert bd([a, full]) == 1
 
     # partial artifacts (errors key) fail the gate
-    part = tmp_path / "f.json"
-    part.write_text(json.dumps({"schema": "bench_pr4/v1", "config": "smoke",
-                                "cases": base, "errors": {"3d": "boom"}}))
-    assert bd([a, str(part)]) == 1
+    part = _art(tmp_path, "f.json", base, errors={"3d": "boom"})
+    assert bd([a, part]) == 1
+
+
+def test_bench_diff_intersection_and_allowlist(tmp_path, capsys):
+    """Keys on one side only warn (schema growth); required counters
+    missing on either side fail; volatile pr5 structure is skipped."""
+    from benchmarks.bench_diff import main as bd
+    a = _art(tmp_path, "a.json", {"2d": _pr4_case()})
+    grown = _art(tmp_path, "g.json",
+                 {"2d": _pr4_case(bottleneck="network-bound",
+                                  stall_breakdown={"input_starved": 3})})
+    assert bd([a, grown]) == 0               # new keys: warn, not fail
+    out = capsys.readouterr().out
+    assert "only in NEW" in out
+    assert bd([a, grown, "--strict"]) == 1   # --strict promotes to fail
+
+    # losing a required counter is a broken refresh, not schema evolution
+    lost_case = _pr4_case()
+    del lost_case["cycles_routed"]
+    lost = _art(tmp_path, "l.json", {"2d": lost_case})
+    assert bd([a, lost]) == 1
+    out = capsys.readouterr().out
+    assert "required counter missing in NEW" in out
+
+    # pr5-style artifacts: nested dotted required keys; front/stats are
+    # volatile and must not fail even when completely different
+    def pr5_case(cycles=1618, front=()):
+        return {"analytic": {"cycles": 1700, "pes": 60, "cached": False},
+                "best": {"cycles": cycles, "pes": 51,
+                         "max_channel_load": 9},
+                "front": list(front), "n_points": len(front),
+                "stats": {"wall_s": 0.8, "n_measured": 8}}
+    p5a = _art(tmp_path, "p5a.json", {"hdiff": pr5_case(front=[{"a": 1}])},
+               schema="bench_pr5/v1")
+    p5b = _art(tmp_path, "p5b.json", {"hdiff": pr5_case(front=[{"b": 2}])},
+               schema="bench_pr5/v1")
+    assert bd([p5a, p5b]) == 0
+    p5worse = _art(tmp_path, "p5w.json", {"hdiff": pr5_case(cycles=1800)},
+                   schema="bench_pr5/v1")
+    assert bd([p5a, p5worse]) == 1
+    out = capsys.readouterr().out
+    assert "best.cycles" in out
+
+
+def test_bench_diff_trend_gate(tmp_path, capsys):
+    """Trend mode: fail only when worse than every one of the last N;
+    blessed regressions warn instead of re-firing forever."""
+    from benchmarks.bench_diff import main as bd
+    from repro.telemetry.metrics import append_history, case_records
+
+    hist = str(tmp_path / "hist.jsonl")
+
+    def art_for(cycles):
+        return {"schema": "bench_pr4/v1", "config": "smoke",
+                "cases": {"2d": _pr4_case(cycles_routed=cycles)}}
+
+    # empty history: first run seeds the trend (warn, exit 0)
+    new = _art(tmp_path, "n.json", {"2d": _pr4_case(cycles_routed=650)})
+    assert bd([new, "--trend", "3", "--history", hist]) == 0
+    assert "seeds the trend" in capsys.readouterr().out
+
+    for c in (642, 650, 645):
+        append_history(hist, case_records(art_for(c), ts=1000.0))
+
+    # equal to the most recent -> clean pass
+    ok = _art(tmp_path, "ok.json", {"2d": _pr4_case(cycles_routed=645)})
+    assert bd([ok, "--trend", "3", "--history", hist]) == 0
+    # within the envelope (650 was blessed earlier) -> warn, pass
+    within = _art(tmp_path, "w.json", {"2d": _pr4_case(cycles_routed=648)})
+    assert bd([within, "--trend", "3", "--history", hist]) == 0
+    assert "within envelope" in capsys.readouterr().out
+    # injected regression: worse than max(last 3) -> fail
+    bad = _art(tmp_path, "bad.json", {"2d": _pr4_case(cycles_routed=651)})
+    assert bd([bad, "--trend", "3", "--history", hist]) == 1
+    assert "regression 651 > max(last 3) = 650" in capsys.readouterr().out
+    # the window is honest: last 3 of a longer history
+    append_history(hist, case_records(art_for(700), ts=1001.0))
+    assert bd([bad, "--trend", "3", "--history", hist]) == 0
+
+
+def test_stall_summary_and_report_crash_proofing(rng):
+    """Satellite: empty/window-less summaries and unattached sinks render
+    stubs instead of raising — these run on failure/cleanup codepaths."""
+    from repro.telemetry import format_stall_summary, render_report
+    from repro.telemetry.report import bottleneck_table, utilization_grid
+
+    assert format_stall_summary(None) == ""
+    assert format_stall_summary({}) == ""
+    empty = {"window_cycles": None,
+             "cause_counts": {c: 0 for c in STALL_CAUSES}, "nodes": []}
+    assert "no stalls recorded" in format_stall_summary(empty)
+    windowed = {"window_cycles": 64,
+                "cause_counts": {c: 0 for c in STALL_CAUSES}, "nodes": []}
+    assert "no stalls recorded" in format_stall_summary(windowed)
+    assert "last 64 cycles" in format_stall_summary(windowed)
+
+    tel = Telemetry()                          # never attached to a run
+    assert tel.stall_summary()["window_cycles"] is None
+    assert tel.stall_summary()["nodes"] == []
+    assert "no run attached" in utilization_grid(tel)
+    assert "no stalls recorded" in bottleneck_table(tel)
+    assert "no run attached" in render_report(tel)
+
+    # an attached run with zero stalls still renders a stub row
+    spec = StencilSpec((60,), (1,), ((0.25, 0.5, 0.25),), dtype="float64")
+    plan = map_1d(spec, workers=1)
+    tel2 = Telemetry()
+    simulate(plan, rng.normal(size=60), CGRA, engine="vector",
+             telemetry=tel2)
+    if not tel2.stall_totals.sum():
+        assert "(no stalls recorded)" in bottleneck_table(tel2)
 
 
 def test_state_names_cover_constants():
