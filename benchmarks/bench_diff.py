@@ -71,6 +71,10 @@ REQUIRED_COUNTERS = {
                      "stall_cycles", "token_hops"),
     "bench_pr5/v1": ("analytic.cycles", "best.cycles", "best.pes",
                      "best.max_channel_load"),
+    # engine-agnostic on purpose: per-engine walls (interp/vector/jax) are
+    # floats and therefore tolerance-compared / trend-warned, so artifacts
+    # refreshed with --engine both vs all diff cleanly (new keys warn).
+    "bench_pr9/v1": ("n_configs", "cycles_total"),
 }
 
 #: dotted-path prefixes skipped per schema: legitimately trajectory-

@@ -23,13 +23,13 @@ import sys
 try:
     from repro.telemetry.metrics import (DEFAULT_HISTORY, case_records,
                                          append_history, load_history,
-                                         trend_values)
+                                         record_problem, trend_values)
 except ImportError:                        # ran bare: python benchmarks/...
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
                            / "src"))
     from repro.telemetry.metrics import (DEFAULT_HISTORY, case_records,
                                          append_history, load_history,
-                                         trend_values)
+                                         record_problem, trend_values)
 
 #: first matching key is the experiment's headline counter
 PRIMARY = ("cycles_routed", "cycles_fused_routed", "best.cycles", "cycles",
@@ -107,6 +107,19 @@ def report_cmd(args) -> int:
         print(f"observatory: {args.history}: no records yet — run "
               f"`observatory.py append BENCH_*.json` first")
         return 0
+    # unknown/partial record shapes (newer versions, payload-less
+    # throughput records) skip with a named warning, never a KeyError
+    skipped: dict[str, int] = {}
+    kept = []
+    for r in records:
+        prob = record_problem(r)
+        if prob is None:
+            kept.append(r)
+        else:
+            skipped[prob] = skipped.get(prob, 0) + 1
+    for prob, n in sorted(skipped.items()):
+        print(f"observatory: WARNING — skipped {n} record(s): {prob}")
+    records = kept
     lines = {}
     for r in records:
         key = (r.get("schema", "?"), r.get("config", "?"),

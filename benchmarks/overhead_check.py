@@ -27,13 +27,15 @@ import time
 try:
     from repro.telemetry.metrics import (DEFAULT_HISTORY, append_history,
                                          case_records, history_for,
-                                         load_history, trend_values)
+                                         load_history, record_problem,
+                                         trend_values)
 except ImportError:                        # ran bare: python benchmarks/...
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
                            / "src"))
     from repro.telemetry.metrics import (DEFAULT_HISTORY, append_history,
                                          case_records, history_for,
-                                         load_history, trend_values)
+                                         load_history, record_problem,
+                                         trend_values)
 
 SCHEMA = "overhead/v1"
 CASE = "2d_routed_vector"
@@ -81,6 +83,15 @@ def main(argv: list[str] | None = None) -> int:
 
     wall, cycles = measure(args.repeats)
     history = history_for(load_history(args.history), SCHEMA, "smoke", CASE)
+    # records with an unknown/partial shape (newer versions, payload-less
+    # schemas) are skipped with a named warning, never a KeyError
+    problems = sorted({p for p in map(record_problem, history)
+                       if p is not None})
+    if problems:
+        n_bad = sum(record_problem(r) is not None for r in history)
+        print(f"overhead_check: WARNING — skipped {n_bad} history "
+              f"record(s): {'; '.join(problems)}")
+        history = [r for r in history if record_problem(r) is None]
     recent = trend_values(history, "wall_s", last=args.last, kind="walls")
 
     status = 0

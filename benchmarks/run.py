@@ -28,14 +28,23 @@ A case that fails inside an artifact no longer aborts the refresh: the
 remaining cases still run, the partial artifact is written with an
 ``errors`` map, and the process exits nonzero.
 
-``--engine {interp,vector,both}`` selects the simulation backend for the
-pr2/pr3 artifact cases — ``both`` times the two backends, asserts identical
-cycles/fires/outputs (CI's engine-drift gate) and records per-engine wall
-times.  ``--case NAME`` restricts every artifact to one named case.
+``--engine {interp,vector,both,jax,all}`` selects the simulation backend
+for the pr2/pr3/pr4 artifact cases — ``both`` times interp + vector,
+asserts identical cycles/fires/outputs (CI's engine-drift gate) and
+records per-engine wall times; ``jax`` additionally cross-checks the jax
+engine's ideal-mode run (it cannot route) and records its wall; ``all`` =
+``both`` + the jax cross-check.  ``--case NAME`` restricts every artifact
+to one named case.
+
+``--sweep-artifact PATH`` writes the batched-sweep snapshot
+(BENCH_pr9.json): the auto-tuner's stage-1 ideal sweep on heat2d run
+twice — sequential vector engine vs the batched jax engine
+(``Budget.batch_size``) — with identical per-config cycles asserted and
+the ≥3x throughput gate enforced at refresh time.
 
 ci.sh runs ``--artifact BENCH_pr2.json --program-artifact BENCH_pr3.json
---engine-artifact BENCH_pr4.json --explore BENCH_pr5.json --engine both
---smoke --artifact-only``.
+--engine-artifact BENCH_pr4.json --explore BENCH_pr5.json
+--sweep-artifact BENCH_pr9.json --engine all --smoke --artifact-only``.
 """
 from __future__ import annotations
 
@@ -112,7 +121,7 @@ def artifact_cases(smoke: bool, engine: str = "interp",
                  ("3d", heat_3d(16, 24, 32, dtype="float64"), map_3d, 8)]
 
     topo = FabricTopology.mesh(16, 16)
-    base = "vector" if engine == "vector" else "interp"
+    base = "vector" if engine in ("vector", "jax") else "interp"
     cases = {}
     errors = {}
     for name, spec, mapper, w in specs:
@@ -151,11 +160,25 @@ def _artifact_case(cases, name, spec, mapper, w, topo, base, engine):
         "stall_cycles": routed.fabric["stall_cycles"],
         "sim_wall_s": round(wall_s, 3),
     }
-    if engine == "both":
+    if engine in ("both", "all"):
         vi, vr, _, vwi, vwr, _ = _sim_pair(mk, x, "vector", topo)
         _assert_engines_agree(name, (ideal, routed), (vi, vr))
         cases[name]["sim_wall_s_vector"] = round(vwi + vwr, 3)
         cases[name]["vector_speedup"] = round(wall_s / (vwi + vwr), 2)
+    if engine in ("jax", "all"):
+        # jax parity gate: ideal-mode only (the jax engine cannot route);
+        # cycles/fires/outputs must be bit-identical to the base engine
+        from repro.core import CGRA, simulate
+        plan_j = mk()
+        t0 = time.perf_counter()
+        jres = simulate(plan_j, x, CGRA, engine="jax")
+        wall_j = time.perf_counter() - t0
+        if (jres.cycles != ideal.cycles or jres.fires != ideal.fires
+                or jres.output.tobytes() != ideal.output.tobytes()):
+            raise AssertionError(
+                f"engine drift on {name}/ideal: jax cycles={jres.cycles} "
+                f"{base} cycles={ideal.cycles} (must be identical)")
+        cases[name]["sim_wall_s_jax_ideal"] = round(wall_j, 3)
     # attribution fields (PR 8): one extra routed run with a counter-only
     # telemetry sink, after the timed runs so the walls stay uninstrumented
     from repro.core import CGRA, simulate
@@ -191,7 +214,7 @@ def program_artifact_cases(smoke: bool, engine: str = "interp",
                  ("hdiff", hdiff_program(48, 64), 8)]
 
     topo = FabricTopology.mesh(16, 16)
-    base = "vector" if engine == "vector" else "interp"
+    base = "vector" if engine in ("vector", "jax") else "interp"
     cases = {}
     errors = {}
 
@@ -245,12 +268,24 @@ def program_artifact_cases(smoke: bool, engine: str = "interp",
             "stall_cycles": routed.fabric["stall_cycles"],
             "sim_wall_s": round(wall_s, 3),
         }
-        if engine == "both":
+        if engine in ("both", "all"):
             vi, vr, _, _, vwr, _ = _sim_pair(mk, x, "vector", topo)
             _assert_engines_agree(name, (ideal, routed), (vi, vr))
             # comparable number: the routed sim alone, like sim_wall_s
             cases[name]["sim_wall_s_vector"] = round(vwr, 3)
             cases[name]["vector_speedup"] = round(wall_s / vwr, 2)
+        if engine in ("jax", "all"):
+            # jax parity gate on the program pipeline (ideal-mode only)
+            from repro.core import simulate
+            t0 = time.perf_counter()
+            jres = simulate(mk(), x, CGRA, engine="jax")
+            wall_j = time.perf_counter() - t0
+            if (jres.cycles != ideal.cycles or jres.fires != ideal.fires
+                    or jres.output.tobytes() != ideal.output.tobytes()):
+                raise AssertionError(
+                    f"engine drift on {name}/ideal: jax "
+                    f"cycles={jres.cycles} {base} cycles={ideal.cycles}")
+            cases[name]["sim_wall_s_jax_ideal"] = round(wall_j, 3)
 
     for name, prog, w in progs:
         if case and name != case:
@@ -263,11 +298,19 @@ def program_artifact_cases(smoke: bool, engine: str = "interp",
     return cases, errors
 
 
-def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
+def engine_artifact_cases(smoke: bool, case: str | None = None,
+                          engine: str = "interp") -> dict:
     """BENCH_pr4: interpreter vs compiled vector engine, wall-clock and
     speedup on the pr2 single-op cases and the pr3 program pipelines (at
     their full 48x64/w8 size in every config — that is the paper-scale
-    claim), plus one large program case only the vector engine runs."""
+    claim), plus one large program case only the vector engine runs.
+
+    With ``--engine jax``/``all`` every case additionally runs the jax
+    engine in ideal mode (bit-identical cycles/output asserted) and
+    records ``jax_wall_s`` + ``jax_speedup`` (vector ideal wall / jax
+    ideal wall) next to the interp/vector walls.  A single unbatched plan
+    is *not* where the jax engine wins — that is the batched sweep
+    (BENCH_pr9) — so these walls are recorded, not gated."""
     import numpy as np
 
     from repro.core import map_1d, map_2d, map_3d
@@ -313,6 +356,18 @@ def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
             "stall_cycles": vr.fabric["stall_cycles"],
             "vector_wall_s": round(wall_v, 3),
         }
+        if engine in ("jax", "all"):
+            from repro.core import CGRA, simulate
+            t0 = time.perf_counter()
+            jres = simulate(mk(), x, CGRA, engine="jax")
+            wall_j = time.perf_counter() - t0
+            if (jres.cycles != vi.cycles
+                    or jres.output.tobytes() != vi.output.tobytes()):
+                raise AssertionError(
+                    f"engine drift on {name}/ideal: jax "
+                    f"cycles={jres.cycles} vector cycles={vi.cycles}")
+            entry["jax_wall_s"] = round(wall_j, 3)
+            entry["jax_speedup"] = round(vwi / wall_j, 2)
         if kind == "large-vector-only":
             # the whole point of the compiled engine: this grid is out of
             # the interpreter's reach (≈25x the vector wall).
@@ -326,6 +381,8 @@ def engine_artifact_cases(smoke: bool, case: str | None = None) -> dict:
             entry["interp_wall_s"] = round(wall_i, 3)
             entry["speedup"] = round(wall_i / wall_v, 2)
             entry["engines"] = ["interp", "vector"]
+        if "jax_wall_s" in entry:
+            entry["engines"] = entry["engines"] + ["jax"]
         cases[name] = entry
 
     def prog_x(pl):
@@ -436,6 +493,82 @@ def explore_artifact_cases(smoke: bool, case: str | None = None,
     return cases, errors
 
 
+def sweep_artifact_cases(smoke: bool, case: str | None = None) -> dict:
+    """BENCH_pr9: batched-jax stage-1 tuner sweep throughput vs the
+    sequential vector path (PR 9's headline).  The heat2d stage-1 ideal
+    sweep runs twice through ``repro.explore`` — ``Budget(batch_size=...)``
+    (jax engine, chunked one-device-call batches) vs the plain sequential
+    vector loop — on fresh in-memory caches.  Per-config cycles must be
+    identical, and the warm batched throughput (best of ``repeats``; the
+    cold wall, which pays the jit compiles, is recorded separately) must
+    beat the sequential throughput by >= 3x — the refresh *is* the gate."""
+    from repro.core import CGRA
+    from repro.core.spec import heat_2d
+    from repro.explore import Budget, SpaceOptions, explore, tile_candidates
+
+    heat = (heat_2d(24, 48, dtype="float64") if smoke
+            else heat_2d(48, 96, dtype="float64"))
+    opts = SpaceOptions(
+        temporal=(1, 2), capacities=("auto", "unbounded"),
+        tiles=(None,) + tuple(t for t in tile_candidates(heat, (2048, 8192))
+                              if t is not None),
+        fabrics=())                        # stage 1 only: the ideal sweep
+    batch, repeats = 32, 2
+    cases = {}
+    errors = {}
+
+    def sweep(batch_size):
+        t0 = time.perf_counter()
+        res = explore(heat, CGRA, options=opts,
+                      budget=Budget(batch_size=batch_size),
+                      workload_timesteps=2, engine="vector")
+        return time.perf_counter() - t0, res
+
+    def one(name):
+        walls_v = []
+        walls_j = []
+        for r in range(repeats):
+            wv, res_v = sweep(None)
+            wj, res_j = sweep(batch)
+            walls_v.append(wv)
+            walls_j.append(wj)
+            cyc_v = sorted(p.sim_cycles for p in res_v.ideal_points)
+            cyc_j = sorted(p.sim_cycles for p in res_j.ideal_points)
+            if cyc_v != cyc_j:
+                raise AssertionError(
+                    f"{name}: batched-jax per-config cycles diverge from "
+                    f"sequential vector ({cyc_j} vs {cyc_v})")
+        n = len(res_v.ideal_points)
+        wall_v, wall_j = min(walls_v), min(walls_j)
+        speedup = (n / wall_j) / (n / wall_v)
+        if speedup < 3.0:
+            raise AssertionError(
+                f"{name}: batched stage-1 throughput speedup {speedup:.2f}x "
+                f"< 3x gate (jax {n / wall_j:.0f} cfg/s vs vector "
+                f"{n / wall_v:.0f} cfg/s)")
+        cases[name] = {
+            "grid": list(heat.grid_shape), "batch_size": batch,
+            "n_configs": n,
+            "cycles_total": sum(p.sim_cycles for p in res_v.ideal_points),
+            "vector_wall_s": round(wall_v, 3),
+            "jax_wall_s": round(wall_j, 3),
+            "jax_cold_wall_s": round(walls_j[0], 3),
+            "vector_configs_per_sec": round(n / wall_v, 1),
+            "jax_configs_per_sec": round(n / wall_j, 1),
+            "speedup": round(speedup, 2),
+        }
+
+    for name in ("heat2d_stage1_sweep",):
+        if case and name != case:
+            continue
+        try:
+            one(name)
+        except Exception as e:                  # isolate: finish the rest
+            errors[name] = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+    return cases, errors
+
+
 def _write_snapshot(path: str, schema: str, smoke: bool, case: str | None,
                     produced: tuple[dict, dict], **extra) -> None:
     """Shared artifact writer.  A ``--case`` filter that matches nothing in
@@ -478,13 +611,16 @@ def write_program_artifact(path: str, smoke: bool, engine: str = "interp",
                     engine=engine)
 
 
-def write_engine_artifact(path: str, smoke: bool,
-                          case: str | None = None) -> None:
+def write_engine_artifact(path: str, smoke: bool, case: str | None = None,
+                          engine: str = "interp") -> None:
     _write_snapshot(
-        path, "bench_pr4/v1", smoke, case, engine_artifact_cases(smoke, case),
+        path, "bench_pr4/v1", smoke, case,
+        engine_artifact_cases(smoke, case, engine),
         note=("interp vs compiled vector engine; program cases run at "
               "the pr3 full size (48x64, w8) in every config; the large "
-              "case is vector-only"))
+              "case is vector-only; jax_wall_s/jax_speedup (ideal-mode "
+              "jax cross-check) appear when refreshed with --engine "
+              "jax/all"))
 
 
 def write_explore_artifact(path: str, smoke: bool,
@@ -497,6 +633,17 @@ def write_explore_artifact(path: str, smoke: bool,
               "worker choice; fronts verified non-dominated and best <= "
               "analytical cycles at refresh time; evals cached in "
               "<artifact>.cache"))
+
+
+def write_sweep_artifact(path: str, smoke: bool,
+                         case: str | None = None) -> None:
+    _write_snapshot(
+        path, "bench_pr9/v1", smoke, case, sweep_artifact_cases(smoke, case),
+        note=("batched-jax stage-1 tuner sweep (Budget.batch_size, one "
+              "jitted+vmapped device call per chunk) vs the sequential "
+              "vector path on the heat2d ideal sweep; identical per-config "
+              "cycles and >=3x warm throughput asserted at refresh time; "
+              "jax_cold_wall_s includes the jit compiles"))
 
 
 def write_trace_artifact(path: str, smoke: bool,
@@ -554,10 +701,16 @@ def main(argv: list[str] | None = None) -> None:
                     help="run one routed smoke case with telemetry and "
                     "write a Perfetto trace_event JSON to PATH "
                     "(open in ui.perfetto.dev)")
-    ap.add_argument("--engine", choices=("interp", "vector", "both"),
+    ap.add_argument("--sweep-artifact", metavar="PATH",
+                    help="write the batched-jax tuner-sweep throughput "
+                    "snapshot (BENCH_pr9.json) to PATH")
+    ap.add_argument("--engine",
+                    choices=("interp", "vector", "both", "jax", "all"),
                     default="interp",
-                    help="simulation backend for the pr2/pr3 artifacts; "
-                    "'both' cross-validates and records per-engine walls")
+                    help="simulation backend for the pr2/pr3/pr4 artifacts; "
+                    "'both' cross-validates interp+vector and records "
+                    "per-engine walls; 'jax' adds the ideal-mode jax "
+                    "cross-check; 'all' = both + jax")
     ap.add_argument("--case", metavar="NAME",
                     help="restrict artifacts to one named case")
     ap.add_argument("--history", metavar="PATH",
@@ -570,7 +723,8 @@ def main(argv: list[str] | None = None) -> None:
                     help="skip the CSV benchmark modules (needs an artifact)")
     args = ap.parse_args(argv)
     any_artifact = (args.artifact or args.program_artifact
-                    or args.engine_artifact or args.explore or args.trace)
+                    or args.engine_artifact or args.explore or args.trace
+                    or args.sweep_artifact)
     if args.artifact_only and not any_artifact:
         ap.error("--artifact-only requires --artifact/--program-artifact/"
                  "--engine-artifact")
@@ -605,8 +759,16 @@ def main(argv: list[str] | None = None) -> None:
                 traceback.print_exc(file=sys.stderr)
     if args.engine_artifact:
         try:
-            write_engine_artifact(args.engine_artifact, args.smoke, args.case)
+            write_engine_artifact(args.engine_artifact, args.smoke,
+                                  args.case, args.engine)
             written.append(args.engine_artifact)
+        except Exception:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+    if args.sweep_artifact:
+        try:
+            write_sweep_artifact(args.sweep_artifact, args.smoke, args.case)
+            written.append(args.sweep_artifact)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)

@@ -6,11 +6,14 @@
 #    installed and under the in-tree repro.testing.minihyp shim otherwise).
 # 2. Artifact refresh (smoke configuration): BENCH_pr2 single-op mappings,
 #    BENCH_pr3 program pipelines, BENCH_pr4 interp-vs-vector engine
-#    comparison, BENCH_pr5 auto-tuner Pareto fronts, plus a validated
-#    Perfetto trace for one routed case.  --engine both makes the refresh
-#    itself a drift gate (identical cycles/fires/outputs across engines);
+#    comparison (+ jax ideal-mode walls), BENCH_pr5 auto-tuner Pareto
+#    fronts, BENCH_pr9 batched-jax tuner-sweep throughput, plus a
+#    validated Perfetto trace for one routed case.  --engine all makes the
+#    refresh itself a drift gate (identical cycles/fires/outputs across
+#    interp/vector AND the ideal-mode jax engine — the jax parity gate);
 #    the pr5 refresh asserts non-dominated fronts and tuner-best <=
-#    analytical baseline.
+#    analytical baseline; the pr9 refresh asserts identical per-config
+#    cycles and the >=3x batched-sweep throughput gate.
 # 3. Snapshot gate: the refreshed BENCH_pr4 vs the committed one —
 #    deterministic counters exact, walls within machine-noise tolerance.
 # 4. Trend gate: every refreshed artifact vs the last 5 records of
@@ -25,22 +28,30 @@
 #    BENCH_history.jsonl and the trend/attribution report renders.
 set -euo pipefail
 cd "$(dirname "$0")"
+# jax engine determinism pin: CPU backend only (no accidental device
+# pickup).  The 64-bit pin is scoped to the benchmark refresh below — the
+# seed model tests expect default-f32 promotion — and jax_engine enables
+# x64 in-process regardless, so the parity/throughput gates are f64 either
+# way; the env pin just makes the benchmark runs explicit about it.
+export JAX_PLATFORMS=cpu
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 trace_out="${TRACE_OUT:-$(mktemp -d)/trace_2d.json}"
 prev_pr4="$(mktemp -d)/BENCH_pr4.prev.json"
 cp BENCH_pr4.json "$prev_pr4"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --artifact BENCH_pr2.json \
     --program-artifact BENCH_pr3.json --engine-artifact BENCH_pr4.json \
-    --explore BENCH_pr5.json --trace "$trace_out" \
-    --engine both --smoke --artifact-only
+    --explore BENCH_pr5.json --sweep-artifact BENCH_pr9.json \
+    --trace "$trace_out" \
+    --engine all --smoke --artifact-only
 
 python benchmarks/bench_diff.py "$prev_pr4" BENCH_pr4.json \
     --rtol 0.5 --atol 0.1
 
-for art in BENCH_pr2.json BENCH_pr3.json BENCH_pr4.json BENCH_pr5.json; do
+for art in BENCH_pr2.json BENCH_pr3.json BENCH_pr4.json BENCH_pr5.json \
+    BENCH_pr9.json; do
     python benchmarks/bench_diff.py "$art" --trend 5 \
         --history BENCH_history.jsonl
 done
@@ -48,5 +59,6 @@ done
 python benchmarks/overhead_check.py --history BENCH_history.jsonl
 
 python benchmarks/observatory.py append BENCH_pr2.json BENCH_pr3.json \
-    BENCH_pr4.json BENCH_pr5.json --history BENCH_history.jsonl
+    BENCH_pr4.json BENCH_pr5.json BENCH_pr9.json \
+    --history BENCH_history.jsonl
 python benchmarks/observatory.py report --history BENCH_history.jsonl

@@ -1,15 +1,30 @@
-"""Simulation backends: reference interpreter + compiled vector engine.
+"""Simulation backends: reference interpreter, compiled vector engine, and
+the jitted/batched jax engine.
 
-``repro.core.simulator.simulate(..., engine="interp"|"vector")`` dispatches
-here.  Both backends implement identical semantics over the same
+``repro.core.simulator.simulate(..., engine="interp"|"vector"|"jax")``
+dispatches here.  All backends implement identical semantics over the same
 :class:`~repro.core.engine.common.RawStats` contract; the vector engine
 compiles the DFG once into struct-of-arrays tables
 (:mod:`repro.core.engine.compile`) and runs each cycle as a handful of
-vectorized numpy passes (:mod:`repro.core.engine.vector`).
+vectorized numpy passes (:mod:`repro.core.engine.vector`); the jax engine
+(:mod:`repro.core.engine.jax_engine`, imported lazily — it pulls in jax)
+runs the same tables as a jitted ``lax.while_loop`` fixed point and can
+``vmap`` a whole batch of plans into one device call.
+
+``ENGINE_SEMANTICS`` names each backend's cycle-semantics version.  It is
+part of the auto-tuner's EvalCache scope key, so measurements taken by one
+engine are never replayed as another's (and a semantics bump invalidates
+that engine's cached evals only).
 """
 from repro.core.engine.common import RawStats, SimDeadlock
 from repro.core.engine.compile import (CompiledPlan, StaleCompiledPlanError,
                                        compile_plan, compiled_for)
 
+#: engine name -> semantics version tag (EvalCache scope component).
+#: "jax-batch/v1" is mirrored by ``jax_engine.SEMANTICS`` — keep in sync.
+ENGINE_SEMANTICS = {"interp": "interp/v1", "vector": "vector-soa/v1",
+                    "jax": "jax-batch/v1"}
+
 __all__ = ["RawStats", "SimDeadlock", "CompiledPlan",
-           "StaleCompiledPlanError", "compile_plan", "compiled_for"]
+           "StaleCompiledPlanError", "compile_plan", "compiled_for",
+           "ENGINE_SEMANTICS"]

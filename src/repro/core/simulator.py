@@ -52,9 +52,10 @@ if TYPE_CHECKING:  # pragma: no cover - avoids core <-> fabric import cycle
     from repro.fabric.route import RoutedFabric
     from repro.telemetry import Telemetry
 
-__all__ = ["SimDeadlock", "SimResult", "simulate", "ENGINES"]
+__all__ = ["SimDeadlock", "SimResult", "simulate", "simulate_batch",
+           "ENGINES"]
 
-ENGINES = ("interp", "vector")
+ENGINES = ("interp", "vector", "jax")
 
 
 @dataclasses.dataclass
@@ -98,8 +99,11 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     ``fabric``: a ``repro.fabric.route.RoutedFabric`` for this plan turns on
     network-aware mode (routed hop latency + link-bandwidth contention).
 
-    ``engine``: ``"interp"`` (reference per-node interpreter) or ``"vector"``
-    (compiled struct-of-arrays engine, identical results, much faster).
+    ``engine``: ``"interp"`` (reference per-node interpreter), ``"vector"``
+    (compiled struct-of-arrays engine, identical results, much faster), or
+    ``"jax"`` (the compiled tables as a jitted ``lax.while_loop`` — identical
+    results in ideal mode; raises ``NotImplementedError`` with ``fabric=`` or
+    ``telemetry=``, see :mod:`repro.core.engine.jax_engine`).
 
     ``telemetry``: a ``repro.telemetry.Telemetry`` sink to record per-node
     fire/stall timelines, stall attribution and per-link occupancy into
@@ -115,14 +119,22 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     flat_out = np.zeros(int(np.prod(out_shape)), dtype=np.float64)
 
     epc = mem_elems_per_cycle(spec, machine, mem_efficiency)
-    backend = _interp.run if engine == "interp" else _vector.run
+    if engine == "jax":
+        from repro.core.engine import jax_engine as _jax   # lazy: pulls jax
+        backend = _jax.run
+    else:
+        backend = _interp.run if engine == "interp" else _vector.run
     if telemetry is not None:
         telemetry.attach(plan, fabric)
     stats = backend(plan, flat_in, flat_out, epc, max_cycles, fabric,
                     telemetry)
+    return _to_result(plan, machine, stats, flat_out, out_shape, fabric)
 
+
+def _to_result(plan, machine: Machine, stats, flat_out, out_shape,
+               fabric) -> SimResult:
     gflops = (stats.flops / stats.cycles) * machine.clock_ghz
-    roof = analyze(spec, machine, workers=plan.workers)
+    roof = analyze(plan.spec, machine, workers=plan.workers)
     fabric_stats = None
     if fabric is not None:
         fabric_stats = {**fabric.stats(),
@@ -136,3 +148,64 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
         pct_of_compute_peak=gflops / machine.peak_gflops,
         max_queue_total=stats.max_queue_total, mac_pes=plan.mac_pes,
         fabric=fabric_stats)
+
+
+def simulate_batch(items, machine: Machine,
+                   max_cycles: int = 50_000_000,
+                   mem_efficiency: float = 1.0,
+                   engine: str = "jax"):
+    """Simulate B independent ``(plan, x)`` pairs and return a list of
+    per-lane outcomes, aligned with ``items``: a :class:`SimResult` on
+    success, or the failure **as a value** — ``SimDeadlock`` for
+    deadlock/timeout, ``NotImplementedError`` (``JaxLoweringError``) for
+    lanes the jax lowering rejects.  Nothing is raised for per-lane
+    failures, so one bad lane never poisons its siblings.
+
+    With ``engine="jax"`` (the default) the whole batch — plans padded to a
+    common shape — runs as **one jitted+vmapped device call**
+    (:mod:`repro.core.engine.jax_engine`); this is the auto-tuner's batched
+    stage-1 evaluator.  Any other engine falls back to a sequential loop
+    with the same returns-as-values contract (handy for benchmarking the
+    batched path against the sequential one)."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose one of {ENGINES}")
+    prepped = []
+    for plan, x in items:
+        spec = plan.spec
+        flat_in = np.asarray(x, dtype=np.float64).reshape(-1)
+        out_shape = tuple(getattr(plan, "out_shape", None) or spec.grid_shape)
+        flat_out = np.zeros(int(np.prod(out_shape)), dtype=np.float64)
+        epc = mem_elems_per_cycle(spec, machine, mem_efficiency)
+        prepped.append((plan, flat_in, flat_out, out_shape, epc))
+
+    if engine == "jax":
+        from repro.core.engine import jax_engine as _jax   # lazy: pulls jax
+        from repro.core.engine.compile import compiled_for
+        batch, out = [], [None] * len(prepped)
+        for i, (plan, flat_in, flat_out, _os, epc) in enumerate(prepped):
+            try:
+                batch.append((i, compiled_for(plan, None), flat_in,
+                              flat_out, epc))
+            except ValueError as e:        # uncompilable op vocabulary
+                out[i] = _jax.JaxLoweringError(str(e))
+        raw = _jax.run_compiled_batch(
+            [(cp, fi, fo, epc) for _i, cp, fi, fo, epc in batch],
+            max_cycles=max_cycles)
+        for (i, _cp, _fi, _fo, _epc), stats in zip(batch, raw):
+            plan, _flat_in, flat_out, out_shape, _e = prepped[i]
+            out[i] = stats if isinstance(stats, Exception) else _to_result(
+                plan, machine, stats, flat_out, out_shape, None)
+        return out
+
+    results = []
+    for plan, flat_in, flat_out, out_shape, epc in prepped:
+        backend = _interp.run if engine == "interp" else _vector.run
+        try:
+            stats = backend(plan, flat_in, flat_out, epc, max_cycles,
+                            None, None)
+        except SimDeadlock as e:
+            results.append(e)
+            continue
+        results.append(_to_result(plan, machine, stats, flat_out, out_shape,
+                                  None))
+    return results

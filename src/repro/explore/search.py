@@ -3,7 +3,10 @@
 The measured half of the tuner.  Stage 1 simulates every pruned-in config in
 *ideal* mode (no network) with the compiled vector engine — fast enough that
 a whole worker/temporal/capacity/tiling lattice costs less than one routed
-interp run used to.  Stage 2 takes the stage-1 Pareto finalists (plus,
+interp run used to.  With ``Budget.batch_size`` set, stage 1 instead chunks
+the pending configs and runs each chunk as **one** jitted+vmapped device
+call on the jax engine (:func:`repro.core.simulator.simulate_batch`);
+lanes the jax lowering can't express fall back to the sequential engine.  Stage 2 takes the stage-1 Pareto finalists (plus,
 always, the paper's analytical baseline) and pays for physics: seeded
 placement (optionally restarted), XY routing, and network-aware simulation
 per candidate fabric, producing the final objective vectors
@@ -24,6 +27,7 @@ import time
 
 import numpy as np
 
+from repro.core.engine import ENGINE_SEMANTICS
 from repro.core.engine.common import SimDeadlock
 from repro.core.roofline import Machine
 from repro.core.simulator import simulate
@@ -36,11 +40,21 @@ from repro.explore.space import (MappingConfig, SpaceOptions, as_target,
 
 @dataclasses.dataclass(frozen=True)
 class Budget:
-    """What the measured stage may spend.  ``None`` = unlimited."""
+    """What the measured stage may spend.  ``None`` = unlimited.
+
+    ``batch_size`` switches the stage-1 ideal sweep to the batched jax
+    engine: pending configs are chunked into groups of ``batch_size`` and
+    each group simulates as one jitted+vmapped device call
+    (``simulate_batch``), instead of one sequential ``vector.run`` per
+    config.  Lanes the jax lowering rejects fall back to the sequential
+    evaluator; stage-2 routed finalists always use the sequential engine
+    (the jax path is ideal-mode only).  ``None`` keeps the sequential
+    stage 1."""
     max_evals: int | None = None          # simulate() calls (cache hits free)
     max_sim_cycles: int | None = None     # summed simulated cycles
     routed_finalists: int = 4             # stage-1 survivors that get routed
     sim_max_cycles: int = 5_000_000       # per-simulation runaway guard
+    batch_size: int | None = None         # stage-1 lanes per batched jax call
 
 
 @dataclasses.dataclass
@@ -243,6 +257,128 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
     return pt
 
 
+def _stage1_batched(target, kept, machine, *, base_scope: dict,
+                    seq_scope: dict, cache: EvalCache, state: _BudgetState,
+                    engine: str, failures: list, skipped: list,
+                    verify: bool, tel=None) -> list[EvalPoint]:
+    """Stage-1 ideal sweep as chunked one-device-call jax batches.
+
+    Pending (uncached, in-budget) configs are built, chunked into groups of
+    ``Budget.batch_size`` and dispatched through ``simulate_batch`` — each
+    chunk is one jitted+vmapped device call over plans padded to a common
+    shape.  Measurements are keyed under the jax engine's own scope
+    (``engine`` + ``engine_semantics``), so batched results and sequential
+    ``engine`` results can never replay each other.  Per-lane failures come
+    back *as values*: deadlocks/timeouts are cached as failures exactly like
+    the sequential path; lanes the jax lowering rejects
+    (:class:`~repro.core.engine.jax_engine.JaxLoweringError`) fall back to
+    the sequential evaluator under its own scope."""
+    from repro.core.simulator import simulate_batch
+
+    scope = {**base_scope, "engine": "jax",
+             "engine_semantics": ENGINE_SEMANTICS["jax"], "mode": "ideal"}
+    points: list[EvalPoint] = []
+    pending: list[tuple[MappingConfig, str]] = []
+
+    def span(key: str, outcome: str, t0: float, *, cached: bool = False,
+             cycles: int | None = None) -> None:
+        if tel is None:
+            return
+        el = time.perf_counter() - t0
+        b = state.budget
+        tel.span(f"ideal {key[:10]}", cat="tuner", track="search/ideal",
+                 t0=tel.now() - el, dur=el, key=key, phase="ideal",
+                 outcome=outcome, cached=cached, cycles=cycles,
+                 batched=True,
+                 evals_remaining=(None if b.max_evals is None
+                                  else b.max_evals - state.evals),
+                 sim_cycles_remaining=(None if b.max_sim_cycles is None
+                                       else b.max_sim_cycles
+                                       - state.sim_cycles))
+
+    for cfg in kept:
+        key = cfg.key(scope, ideal=True)
+        t0 = time.perf_counter()
+        ent = cache.get(key)
+        if ent is not None:
+            if "failed" in ent:
+                failures.append({"config": cfg.canonical(),
+                                 "reason": ent["failed"], "cached": True})
+                span(key, f"cached-failure: {ent['failed']}", t0, cached=True)
+            else:
+                span(key, "cached", t0, cached=True,
+                     cycles=ent["sim_cycles"])
+                points.append(_point_from_cache(cfg, ent, False))
+            continue
+        pending.append((cfg, key))
+
+    bsz = max(1, int(state.budget.batch_size))
+    i = 0
+    while i < len(pending):
+        if state.exhausted():
+            for cfg, key in pending[i:]:
+                skipped.append(cfg)
+                span(key, "budget-skipped", time.perf_counter())
+            break
+        take = bsz
+        if state.budget.max_evals is not None:
+            # never dispatch more lanes than the eval budget has left
+            take = min(take, state.budget.max_evals - state.evals)
+        chunk = pending[i:i + take]
+        i += len(chunk)
+        lanes = []                        # (cfg, key, plan, x, t0)
+        for cfg, key in chunk:
+            t0 = time.perf_counter()
+            try:
+                plan = target.build(cfg)
+            except ValueError as e:
+                failures.append({"config": cfg.canonical(),
+                                 "reason": f"build: {e}", "cached": False})
+                cache.put(key, {"failed": f"build: {e}"})
+                span(key, f"failed: build: {e}", t0)
+                continue
+            lanes.append((cfg, key, plan, target.make_input(plan), t0))
+        if not lanes:
+            continue
+        raw = simulate_batch([(p, x) for _c, _k, p, x, _t in lanes],
+                             machine, max_cycles=state.budget.sim_max_cycles,
+                             engine="jax")
+        for (cfg, key, plan, x, t0), res in zip(lanes, raw):
+            if isinstance(res, NotImplementedError):
+                # lowering rejected this lane: sequential fallback, measured
+                # and cached under the sequential engine's own scope
+                pt = _evaluate(target, cfg, machine, scope=seq_scope,
+                               cache=cache, state=state, engine=engine,
+                               failures=failures, skipped=skipped,
+                               verify=verify, routed=False, tel=tel)
+                if pt is not None:
+                    points.append(pt)
+                continue
+            if isinstance(res, SimDeadlock):
+                state.charge(res.cycles)  # the cycles burnt before giving up
+                reason = (f"{'timeout' if res.timed_out else 'deadlock'}: "
+                          f"{res}")
+                failures.append({"config": cfg.canonical(),
+                                 "reason": reason, "cached": False})
+                cache.put(key, {"failed": reason})
+                span(key, f"failed: {reason}", t0)
+                continue
+            state.charge(res.cycles)
+            if verify:
+                target.verify(plan, cfg, x, res)
+            pt = EvalPoint(
+                config=cfg, cycles=res.cycles * target.repeats(cfg),
+                pes=len(plan.dfg.nodes), max_channel_load=0,
+                gflops=res.gflops, routed=False, sim_cycles=res.cycles,
+                bottleneck="")
+            cache.put(key, {"cycles": pt.cycles, "pes": pt.pes, "chan": 0,
+                            "gflops": pt.gflops, "sim_cycles": pt.sim_cycles,
+                            "bottleneck": ""})
+            span(key, "measured", t0, cycles=res.cycles)
+            points.append(pt)
+    return points
+
+
 def explore(target, machine: Machine, *,
             options: SpaceOptions | None = None,
             budget: Budget | None = None,
@@ -286,21 +422,31 @@ def explore(target, machine: Machine, *,
     # capacity_model names the queue-sizing policy measured evals ran under
     # (hop/v1 = routed auto-capacity grows minima by hop depth); bumping it
     # invalidates cached evals taken under the older sizing.
+    # engine + engine_semantics scope a measurement to the backend (and its
+    # semantics version) that took it: batched-jax evals can never be
+    # replayed as vector evals or vice versa.
     base_scope = {"target": target.signature(),
                   "machine": _machine_sig(machine), "engine": engine,
+                  "engine_semantics": ENGINE_SEMANTICS[engine],
                   "sim_max_cycles": budget.sim_max_cycles,
                   "capacity_model": "hop/v1"}
 
     # ----- stage 1: ideal-mode sweep ----------------------------------------
     scope = {**base_scope, "mode": "ideal"}
-    ideal_points = []
-    for cfg in kept:
-        pt = _evaluate(target, cfg, machine, scope=scope, cache=cache,
-                       state=state, engine=engine, failures=failures,
-                       skipped=skipped, verify=verify, routed=False,
-                       tel=telemetry)
-        if pt is not None:
-            ideal_points.append(pt)
+    if budget.batch_size:
+        ideal_points = _stage1_batched(
+            target, kept, machine, base_scope=base_scope, seq_scope=scope,
+            cache=cache, state=state, engine=engine, failures=failures,
+            skipped=skipped, verify=verify, tel=telemetry)
+    else:
+        ideal_points = []
+        for cfg in kept:
+            pt = _evaluate(target, cfg, machine, scope=scope, cache=cache,
+                           state=state, engine=engine, failures=failures,
+                           skipped=skipped, verify=verify, routed=False,
+                           tel=telemetry)
+            if pt is not None:
+                ideal_points.append(pt)
 
     analytic_pt = next((p for p in ideal_points
                         if p.config == analytic_cfg), None)

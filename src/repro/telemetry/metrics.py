@@ -36,7 +36,7 @@ import time
 
 __all__ = ["HISTORY_VERSION", "DEFAULT_HISTORY", "flatten_case",
            "fingerprint", "case_records", "append_history", "load_history",
-           "history_for", "trend_values"]
+           "history_for", "trend_values", "record_problem"]
 
 HISTORY_VERSION = 1
 DEFAULT_HISTORY = "BENCH_history.jsonl"
@@ -138,7 +138,28 @@ def history_for(records: list[dict], schema: str, config: str,
 def trend_values(records: list[dict], key: str, *, last: int | None = None,
                  kind: str = "counters") -> list:
     """The last ``last`` values of one counter/wall along a trend line
-    (records missing the key are skipped, so schema growth is painless)."""
+    (records missing the key — or carrying a malformed/unknown payload,
+    see :func:`record_problem` — are skipped, so schema growth is
+    painless)."""
     vals = [r[kind][key] for r in records
-            if key in r.get(kind, {})]
+            if isinstance(r.get(kind), dict) and key in r[kind]]
     return vals[-last:] if last else vals
+
+
+def record_problem(rec: dict) -> str | None:
+    """Why one history record can't be trended — ``None`` when well-formed.
+
+    The history is append-only and shared by several producers, so
+    consumers (observatory report, overhead gate, trend gate) must treat
+    records from a newer version or with a partial/unknown payload shape
+    (e.g. a throughput record that has no ``counters``) as *data to skip
+    with a named warning*, never as a reason to crash."""
+    v = rec.get("v")
+    if not isinstance(v, int) or v > HISTORY_VERSION:
+        return f"unknown history version {v!r}"
+    for kind in ("counters", "walls", "meta"):
+        if kind in rec and not isinstance(rec[kind], dict):
+            return f"{kind!r} is not a mapping"
+    if "counters" not in rec and "walls" not in rec:
+        return "no counters/walls payload"
+    return None

@@ -565,6 +565,60 @@ def test_bench_diff_trend_gate(tmp_path, capsys):
     assert bd([bad, "--trend", "3", "--history", hist]) == 0
 
 
+def test_history_unknown_record_shapes_skip_cleanly(tmp_path, capsys,
+                                                    monkeypatch):
+    """Satellite: history records with an unknown version or a partial
+    payload (e.g. a throughput record without ``counters``) must skip with
+    a named warning in the observatory report and the overhead gate —
+    never a KeyError/TypeError."""
+    import benchmarks.observatory as obs
+    import benchmarks.overhead_check as oc
+    from repro.telemetry.metrics import (append_history, case_records,
+                                         record_problem, trend_values)
+
+    hist = str(tmp_path / "hist.jsonl")
+    art = {"schema": "overhead/v1", "config": "smoke",
+           "cases": {"2d_routed_vector": {"cycles": 716, "wall_s": 0.31,
+                                          "engine": "vector", "repeats": 2}}}
+    append_history(hist, case_records(art, source="overhead_check.py"))
+    with open(hist, "a") as f:
+        for bad in (
+                {"v": 99, "schema": "overhead/v1", "config": "smoke",
+                 "case": "2d_routed_vector", "counters": {},
+                 "walls": {"wall_s": 9.9}},          # future version
+                {"v": 1, "schema": "bench_pr9x/v0", "config": "smoke",
+                 "case": "sweep",
+                 "throughput": {"cfg_per_s": 100.0}},  # payload-less
+                {"v": 1, "schema": "overhead/v1", "config": "smoke",
+                 "case": "2d_routed_vector", "counters": None,
+                 "walls": None}):                    # non-mapping payload
+            f.write(json.dumps(bad) + "\n")
+
+    assert record_problem({"v": 1, "counters": {}, "walls": {}}) is None
+    assert record_problem({"v": 99}) == "unknown history version 99"
+    assert record_problem({"v": 1}) == "no counters/walls payload"
+    assert record_problem({"v": 1, "counters": None}) \
+        == "'counters' is not a mapping"
+    # trend_values itself tolerates non-mapping payloads (version filtering
+    # is the consumers' job, via record_problem)
+    from repro.telemetry.metrics import load_history
+    assert trend_values(load_history(hist), "wall_s",
+                        kind="walls") == [0.31, 9.9]
+
+    assert obs.main(["report", "--history", hist]) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "unknown history version 99" in out
+    assert "no counters/walls payload" in out
+    assert "'counters' is not a mapping" in out
+
+    monkeypatch.setattr(oc, "measure", lambda repeats: (0.30, 716))
+    assert oc.main(["--history", hist, "--no-append"]) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "skipped 2 history record(s)" in out
+    # the valid record still anchors the envelope (median of one = 0.31)
+    assert "median of last 1 = 0.3100" in out
+
+
 def test_stall_summary_and_report_crash_proofing(rng):
     """Satellite: empty/window-less summaries and unattached sinks render
     stubs instead of raising — these run on failure/cleanup codepaths."""
