@@ -75,6 +75,8 @@ REQUIRED_COUNTERS = {
     # floats and therefore tolerance-compared / trend-warned, so artifacts
     # refreshed with --engine both vs all diff cleanly (new keys warn).
     "bench_pr9/v1": ("n_configs", "cycles_total"),
+    "bench_pr10/v1": ("n_configs", "static_pruned", "deadlock_sims_avoided",
+                      "survivors", "best_cycles"),
 }
 
 #: dotted-path prefixes skipped per schema: legitimately trajectory-
@@ -82,6 +84,9 @@ REQUIRED_COUNTERS = {
 VOLATILE = {
     "bench_pr5/v1": ("front", "stats.", "pruned.", "n_points",
                      "analytic.cached", "best.cached"),
+    # the walls measure how much wall the static gate saved this run —
+    # machine-load noise; the avoided-simulation counts are the gated part
+    "bench_pr10/v1": ("wall_on_s", "wall_off_s", "wall_saved_s"),
 }
 
 

@@ -42,9 +42,15 @@ twice — sequential vector engine vs the batched jax engine
 (``Budget.batch_size``) — with identical per-config cycles asserted and
 the ≥3x throughput gate enforced at refresh time.
 
+``--stress-artifact PATH`` writes the static-verifier prune snapshot
+(BENCH_pr10.json): capacity-stressed heat2d/hdiff tuner sweeps run with
+and without ``static_verify`` — identical survivors and ``static_pruned
+== deadlock_sims_avoided`` asserted at refresh time.
+
 ci.sh runs ``--artifact BENCH_pr2.json --program-artifact BENCH_pr3.json
 --engine-artifact BENCH_pr4.json --explore BENCH_pr5.json
---sweep-artifact BENCH_pr9.json --engine all --smoke --artifact-only``.
+--sweep-artifact BENCH_pr9.json --stress-artifact BENCH_pr10.json
+--engine all --smoke --artifact-only``.
 """
 from __future__ import annotations
 
@@ -569,6 +575,103 @@ def sweep_artifact_cases(smoke: bool, case: str | None = None) -> dict:
     return cases, errors
 
 
+def stress_artifact_cases(smoke: bool, case: str | None = None) -> dict:
+    """BENCH_pr10: deadlock simulations avoided by the static verifier
+    (PR 10's headline).  Each case is a capacity-stressed tuner sweep —
+    a config lattice deliberately including under-provisioned fixed queue
+    capacities — run twice through ``repro.explore`` on fresh in-memory
+    caches: ``static_verify=True`` (doomed configs pruned by the verifier,
+    no engine cycles burnt) vs ``static_verify=False`` (every doomed config
+    simulated until the engine proves the deadlock the expensive way).
+    Survivors and their cycles must be identical — the gate only ever skips
+    work, never changes results — and the on-run must avoid >= 1 doomed
+    simulation, asserted at refresh time.  ``wall_saved_s`` is the wall the
+    off-run spent discovering deadlocks dynamically minus the on-run's
+    verifier cost (volatile; the counts are the trend-gated part)."""
+    from repro.core import CGRA
+    from repro.core.spec import heat_2d
+    from repro.explore import Budget, EvalCache, SpaceOptions, explore
+    from repro.program import hdiff_program
+
+    if smoke:
+        targets = {
+            "heat2d_capacity_stress": dict(
+                target=heat_2d(16, 24, dtype="float64"),
+                options=SpaceOptions(workers=(2, 3),
+                                     capacities=(1, 2, "auto"), fabrics=())),
+            "hdiff_capacity_stress": dict(
+                target=hdiff_program(20, 24),
+                options=SpaceOptions(workers=(4,), capacities=(2, "auto"),
+                                     fabrics=())),
+        }
+    else:
+        targets = {
+            "heat2d_capacity_stress": dict(
+                target=heat_2d(32, 48, dtype="float64"),
+                options=SpaceOptions(workers=(2, 3, 4),
+                                     capacities=(1, 2, 3, "auto"),
+                                     fabrics=())),
+            "hdiff_capacity_stress": dict(
+                target=hdiff_program(32, 48),
+                options=SpaceOptions(workers=(4, 8),
+                                     capacities=(2, "auto"), fabrics=())),
+        }
+
+    cases = {}
+    errors = {}
+
+    def sweep(cfg, static):
+        t0 = time.perf_counter()
+        res = explore(cfg["target"], CGRA, options=cfg["options"],
+                      budget=Budget(), cache=EvalCache(),
+                      static_verify=static)
+        return time.perf_counter() - t0, res
+
+    def one(name, cfg):
+        wall_on, res_on = sweep(cfg, True)
+        wall_off, res_off = sweep(cfg, False)
+        surv_on = sorted((str(p.config.canonical()), p.cycles)
+                         for p in res_on.points)
+        surv_off = sorted((str(p.config.canonical()), p.cycles)
+                          for p in res_off.points)
+        if surv_on != surv_off:
+            raise AssertionError(
+                f"{name}: static gate changed the survivors "
+                f"({surv_on} vs {surv_off})")
+        pruned = res_on.stats["static_pruned"]
+        # every statically-pruned config shows up in the off-run as an
+        # engine-discovered deadlock: those are the simulations avoided
+        avoided = sum(1 for f in res_off.failures
+                      if f["reason"].startswith(("deadlock", "timeout")))
+        if pruned < 1 or pruned != avoided:
+            raise AssertionError(
+                f"{name}: static gate pruned {pruned} config(s) but the "
+                f"ungated run hit {avoided} engine deadlock(s) — the "
+                f"verifier must reject exactly the doomed configs")
+        best = min((p.cycles for p in res_on.points), default=0)
+        cases[name] = {
+            "grid": list(cfg["target"].grid_shape),
+            "n_configs": res_on.stats["n_configs"],
+            "static_pruned": pruned,
+            "deadlock_sims_avoided": avoided,
+            "survivors": len(res_on.points),
+            "best_cycles": best,
+            "wall_on_s": round(wall_on, 3),
+            "wall_off_s": round(wall_off, 3),
+            "wall_saved_s": round(wall_off - wall_on, 3),
+        }
+
+    for name, cfg in targets.items():
+        if case and name != case:
+            continue
+        try:
+            one(name, cfg)
+        except Exception as e:                  # isolate: finish the rest
+            errors[name] = f"{type(e).__name__}: {e}"
+            traceback.print_exc(file=sys.stderr)
+    return cases, errors
+
+
 def _write_snapshot(path: str, schema: str, smoke: bool, case: str | None,
                     produced: tuple[dict, dict], **extra) -> None:
     """Shared artifact writer.  A ``--case`` filter that matches nothing in
@@ -646,6 +749,19 @@ def write_sweep_artifact(path: str, smoke: bool,
               "jax_cold_wall_s includes the jit compiles"))
 
 
+def write_stress_artifact(path: str, smoke: bool,
+                          case: str | None = None) -> None:
+    _write_snapshot(
+        path, "bench_pr10/v1", smoke, case,
+        stress_artifact_cases(smoke, case),
+        note=("static-verifier prune gate (repro.analysis.static_verify) "
+              "on capacity-stressed tuner sweeps: static_verify=True vs "
+              "False on fresh caches; identical survivors and "
+              "static_pruned == engine-discovered deadlocks asserted at "
+              "refresh time; wall_saved_s is volatile, the counts are "
+              "trend-gated"))
+
+
 def write_trace_artifact(path: str, smoke: bool,
                          case: str | None = None) -> None:
     """``--trace``: one routed telemetry-on run (the pr2 2d case unless
@@ -704,6 +820,10 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--sweep-artifact", metavar="PATH",
                     help="write the batched-jax tuner-sweep throughput "
                     "snapshot (BENCH_pr9.json) to PATH")
+    ap.add_argument("--stress-artifact", metavar="PATH",
+                    help="write the static-verifier prune snapshot "
+                    "(BENCH_pr10.json: deadlock sims avoided on "
+                    "capacity-stressed sweeps) to PATH")
     ap.add_argument("--engine",
                     choices=("interp", "vector", "both", "jax", "all"),
                     default="interp",
@@ -724,7 +844,7 @@ def main(argv: list[str] | None = None) -> None:
     args = ap.parse_args(argv)
     any_artifact = (args.artifact or args.program_artifact
                     or args.engine_artifact or args.explore or args.trace
-                    or args.sweep_artifact)
+                    or args.sweep_artifact or args.stress_artifact)
     if args.artifact_only and not any_artifact:
         ap.error("--artifact-only requires --artifact/--program-artifact/"
                  "--engine-artifact")
@@ -769,6 +889,13 @@ def main(argv: list[str] | None = None) -> None:
         try:
             write_sweep_artifact(args.sweep_artifact, args.smoke, args.case)
             written.append(args.sweep_artifact)
+        except Exception:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+    if args.stress_artifact:
+        try:
+            write_stress_artifact(args.stress_artifact, args.smoke, args.case)
+            written.append(args.stress_artifact)
         except Exception:
             failed += 1
             traceback.print_exc(file=sys.stderr)

@@ -71,5 +71,15 @@ def main():
           "(render: neato -Tpng)")
 
 
+def lint_plans():
+    """Static-verifier hook (``python -m repro.analysis.lint examples/``)."""
+    alpha = 0.1
+    spec = StencilSpec((360,), (1,), ((alpha, 1 - 2 * alpha, alpha),),
+                       dtype="float64")
+    plan = map_1d(spec, workers=4)
+    yield plan                                     # ideal wires
+    yield plan, route(place(plan, FabricTopology.mesh(8, 8), seed=0))
+
+
 if __name__ == "__main__":
     main()

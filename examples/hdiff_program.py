@@ -72,5 +72,10 @@ def main():
           "oracle check passed, outputs bit-identical ideal vs routed")
 
 
+def lint_plans():
+    """Static-verifier hook (``python -m repro.analysis.lint examples/``)."""
+    yield lower(hdiff_program(24, 32), workers=4, auto_capacity=True)
+
+
 if __name__ == "__main__":
     main()

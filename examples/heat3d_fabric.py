@@ -63,5 +63,12 @@ def main():
     print("outputs bit-identical; oracle check passed")
 
 
+def lint_plans():
+    """Static-verifier hook (``python -m repro.analysis.lint examples/``)."""
+    plan = map_3d(heat_3d(8, 10, 12, dtype="float64"), workers=4)
+    yield plan
+    yield plan, route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+
+
 if __name__ == "__main__":
     main()

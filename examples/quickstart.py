@@ -49,5 +49,12 @@ def main():
     print("DFG written to /tmp/stencil1d.dot (render with graphviz)")
 
 
+def lint_plans():
+    """Static-verifier hook (``python -m repro.analysis.lint examples/``)."""
+    spec = StencilSpec((600,), (2,), ((0.1, 0.2, 0.4, 0.2, 0.1),),
+                       dtype="float64")
+    yield map_1d(spec, workers=4)
+
+
 if __name__ == "__main__":
     main()

@@ -54,5 +54,10 @@ def main():
               f"{r.achievable_gflops/1000:6.2f} TFLOPS on v5e ({r.bound})")
 
 
+def lint_plans():
+    """Static-verifier hook (``python -m repro.analysis.lint examples/``)."""
+    yield map_2d(paper_stencil_2d(ny=30, nx=48, r=12), workers=8)
+
+
 if __name__ == "__main__":
     main()

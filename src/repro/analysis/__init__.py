@@ -1,0 +1,21 @@
+"""Static analysis passes: plan verification, lints, throughput bounds.
+
+``repro.analysis.static_verify`` is the front door (see docs/analysis.md);
+``repro.analysis.hlo`` / ``rooflines`` are imported directly by their users
+(they can pull heavyweight deps and are deliberately not re-exported here).
+"""
+from repro.analysis.static_verify import (STATIC_SEMANTICS,  # noqa: F401
+                                          Counterexample, Finding,
+                                          StaticDeadlock, StaticReport,
+                                          ThroughputBound,
+                                          apply_suggested_capacities,
+                                          check_static, lint_plan,
+                                          suggest_capacity_fix,
+                                          throughput_bound, verify_plan)
+
+__all__ = [
+    "STATIC_SEMANTICS", "Counterexample", "Finding", "StaticDeadlock",
+    "StaticReport", "ThroughputBound", "apply_suggested_capacities",
+    "check_static", "lint_plan", "suggest_capacity_fix", "throughput_bound",
+    "verify_plan",
+]

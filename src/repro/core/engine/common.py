@@ -21,15 +21,24 @@ class SimDeadlock(RuntimeError):
     ``stall_summary`` is the stall-attribution diagnostic (which nodes were
     blocked on what — see ``repro.telemetry``): the last-N-cycle window when
     a telemetry sink was attached, the final-cycle classification otherwise.
-    Both engines embed its rendered form in the exception message."""
+    Both engines embed its rendered form in the exception message.
+
+    ``suggested_capacities`` is the static verifier's repair hint
+    (``repro.analysis.static_verify``): an ``{edge eid: capacity}`` map
+    proven sufficient for the plan to complete, or ``None`` when the
+    deadlock is structural (no capacity bump helps) or the hint was never
+    computed (e.g. a timeout).  The stall table says *where* the pipeline
+    stuck; this says *how to fix it*."""
 
     def __init__(self, msg: str, *, cycles: int = 0,
                  timed_out: bool = False,
-                 stall_summary: dict | None = None):
+                 stall_summary: dict | None = None,
+                 suggested_capacities: dict | None = None):
         super().__init__(msg)
         self.cycles = cycles
         self.timed_out = timed_out
         self.stall_summary = stall_summary
+        self.suggested_capacities = suggested_capacities
 
 
 @dataclasses.dataclass

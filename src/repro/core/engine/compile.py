@@ -104,6 +104,13 @@ def _token_counts(g: DFG) -> tuple[dict[int, int], dict[int, np.ndarray]]:
     return emit, keeps
 
 
+# public names for the static verifier (repro.analysis.static_verify): the
+# token-count topo pass *is* the shared ground truth for how many tokens
+# every queue carries over a full run — the analyzer must not fork it.
+token_counts = _token_counts
+keep_array = _keep_array
+
+
 @dataclasses.dataclass
 class CompiledNetwork:
     """Static route tables for network-aware vector simulation."""

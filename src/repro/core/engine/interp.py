@@ -116,6 +116,13 @@ def run(plan, flat_in, flat_out, elems_per_cycle: float,
     """Run the per-cycle interpreter; mutates ``flat_out`` in place."""
     g = plan.dfg
 
+    # queues live on the Edge objects: a completed run drains them, but a
+    # deadlocked/timed-out one leaves tokens behind — start every run from
+    # the quiescent marking so fix-and-retry on the same plan is valid.
+    for nd in g.nodes:
+        for e in nd.out_edges:
+            e.q.clear()
+
     # per-node runtime state ---------------------------------------------------
     state: dict[int, dict] = {}
     done_pending = 0

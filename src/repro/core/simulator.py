@@ -85,12 +85,24 @@ class SimResult:
         return s
 
 
+def _attach_hint(plan, exc: SimDeadlock) -> SimDeadlock:
+    """Enrich an engine deadlock with the static verifier's capacity-repair
+    hint (``suggested_capacities``) — *how to fix it*, next to the stall
+    table's *where it stuck*.  Timeouts are left alone (the run may simply
+    need more cycles) and diagnosis failures never mask the deadlock."""
+    if not exc.timed_out and exc.suggested_capacities is None:
+        from repro.analysis.static_verify import suggest_capacity_fix
+        exc.suggested_capacities = suggest_capacity_fix(plan)
+    return exc
+
+
 def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
              max_cycles: int = 50_000_000,
              mem_efficiency: float = 1.0,
              fabric: "RoutedFabric | None" = None,
              engine: str = "interp",
-             telemetry: "Telemetry | None" = None) -> SimResult:
+             telemetry: "Telemetry | None" = None,
+             verify: str | None = None) -> SimResult:
     """``mem_efficiency`` derates the memory-port bandwidth to model cache
     conflict misses (the paper observed "more conflict misses in the cache
     for stencil 2D" — its cycle-accurate 2D result corresponds to ~0.80;
@@ -109,9 +121,22 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
     fire/stall timelines, stall attribution and per-link occupancy into
     (``docs/telemetry.md``); ``None`` (the default) keeps the engines on
     their uninstrumented hot paths.
+
+    ``verify="static"``: pre-flight the plan through the static verifier
+    (``repro.analysis.static_verify``) and raise ``StaticDeadlock`` —
+    naming the waits-for counterexample and carrying the capacity-repair
+    hint — *before* burning any engine cycles on a plan that provably
+    cannot complete.  See ``docs/analysis.md``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose one of {ENGINES}")
+    if verify is not None:
+        if verify != "static":
+            raise ValueError(f"unknown verify mode {verify!r}; "
+                             f"only 'static' is supported")
+        from repro.analysis.static_verify import check_static
+        check_static(plan, fabric=fabric, machine=machine,
+                     mem_efficiency=mem_efficiency)
     spec = plan.spec
     flat_in = np.asarray(x, dtype=np.float64).reshape(-1)
     # program plans (repro.program) pack several output fields into one image
@@ -126,8 +151,11 @@ def simulate(plan: MappingPlan, x: np.ndarray, machine: Machine,
         backend = _interp.run if engine == "interp" else _vector.run
     if telemetry is not None:
         telemetry.attach(plan, fabric)
-    stats = backend(plan, flat_in, flat_out, epc, max_cycles, fabric,
-                    telemetry)
+    try:
+        stats = backend(plan, flat_in, flat_out, epc, max_cycles, fabric,
+                        telemetry)
+    except SimDeadlock as e:
+        raise _attach_hint(plan, e)
     return _to_result(plan, machine, stats, flat_out, out_shape, fabric)
 
 
@@ -193,8 +221,13 @@ def simulate_batch(items, machine: Machine,
             max_cycles=max_cycles)
         for (i, _cp, _fi, _fo, _epc), stats in zip(batch, raw):
             plan, _flat_in, flat_out, out_shape, _e = prepped[i]
-            out[i] = stats if isinstance(stats, Exception) else _to_result(
-                plan, machine, stats, flat_out, out_shape, None)
+            if isinstance(stats, SimDeadlock):
+                out[i] = _attach_hint(plan, stats)
+            elif isinstance(stats, Exception):
+                out[i] = stats
+            else:
+                out[i] = _to_result(plan, machine, stats, flat_out,
+                                    out_shape, None)
         return out
 
     results = []
@@ -204,7 +237,7 @@ def simulate_batch(items, machine: Machine,
             stats = backend(plan, flat_in, flat_out, epc, max_cycles,
                             None, None)
         except SimDeadlock as e:
-            results.append(e)
+            results.append(_attach_hint(plan, e))
             continue
         results.append(_to_result(plan, machine, stats, flat_out, out_shape,
                                   None))

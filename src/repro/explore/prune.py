@@ -95,6 +95,23 @@ def prune_space(target, machine: Machine, configs, options: SpaceOptions,
     return kept, log
 
 
+def static_prune_reason(plan, fabric=None) -> tuple[str, dict | None] | None:
+    """Post-build static-verifier gate (``repro.analysis.static_verify``):
+    a config whose plan provably deadlocks is pruned *before* any engine
+    burns up to ``max_cycles`` on it.  Returns ``(reason,
+    suggested_capacities)`` — reason ``"static-capacity: ..."`` when a
+    capacity bump (the returned hint) provably fixes it, ``"static-deadlock:
+    ..."`` when the deadlock is structural — or ``None`` for plans the
+    verifier proves safe (or cannot decide: never prune on "unknown")."""
+    from repro.analysis.static_verify import verify_plan
+    report = verify_plan(plan, fabric=fabric)
+    if report.verdict != "deadlock":
+        return None
+    detail = (report.counterexample.describe() if report.counterexample
+              else "; ".join(str(f) for f in report.errors()) or "unfixable")
+    return f"{report.reason}: {detail}", report.suggested_capacities
+
+
 def fits_fabric(plan, topo: FabricTopology) -> str | None:
     """Exact post-build fabric gate: instruction count vs total slots and
     per-capability-class slot budgets (mirrors ``place``'s own precheck

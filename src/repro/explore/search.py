@@ -27,13 +27,15 @@ import time
 
 import numpy as np
 
+from repro.analysis.static_verify import STATIC_SEMANTICS
 from repro.core.engine import ENGINE_SEMANTICS
 from repro.core.engine.common import SimDeadlock
 from repro.core.roofline import Machine
 from repro.core.simulator import simulate
 from repro.explore.cache import EvalCache
 from repro.explore.pareto import best_point, pareto_front
-from repro.explore.prune import PruneLog, fits_fabric, prune_space
+from repro.explore.prune import (PruneLog, fits_fabric, prune_space,
+                                 static_prune_reason)
 from repro.explore.space import (MappingConfig, SpaceOptions, as_target,
                                  enumerate_space)
 
@@ -151,10 +153,40 @@ def _point_from_cache(cfg: MappingConfig, ent: dict,
                      bottleneck=ent.get("bottleneck", ""))
 
 
+def _hint_json(suggested: dict | None) -> dict | None:
+    """``suggested_capacities`` as a JSON-stable ``{str(eid): cap}`` map —
+    the form failure records and cache entries carry (eids are deterministic
+    per config, so a rebuilt plan accepts the replayed hint as-is)."""
+    if not suggested:
+        return None
+    return {str(k): int(v) for k, v in sorted(suggested.items())}
+
+
+def _paranoia_check(target, cfg: MappingConfig, plan, machine: Machine,
+                    state: _BudgetState, rf) -> None:
+    """``static_paranoia``: prove the verifier right the expensive way — a
+    statically-rejected config must really deadlock when simulated.  Used
+    by the fuzz gate; raises AssertionError on any unsound verdict."""
+    x = target.make_input(plan)
+    try:
+        simulate(plan, x, machine, engine="vector", fabric=rf,
+                 max_cycles=state.budget.sim_max_cycles)
+    except SimDeadlock as e:
+        if not e.timed_out:
+            return
+        raise AssertionError(
+            f"static verifier rejected {cfg.canonical()} but the "
+            f"simulation timed out instead of deadlocking") from e
+    raise AssertionError(
+        f"static verifier rejected {cfg.canonical()} but the simulation "
+        f"completed — unsound static verdict")
+
+
 def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
               cache: EvalCache, state: _BudgetState, engine: str,
               failures: list, skipped: list, verify: bool,
-              routed: bool, tel=None) -> EvalPoint | None:
+              routed: bool, tel=None, static_gate: bool = False,
+              paranoia: bool = False) -> EvalPoint | None:
     """One (possibly cached) measurement; None on failure/budget-skip."""
     key = cfg.key(scope, ideal=not routed)
     t0 = time.perf_counter()
@@ -181,8 +213,12 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
     ent = cache.get(key)
     if ent is not None:
         if "failed" in ent:
-            failures.append({"config": cfg.canonical(),
-                             "reason": ent["failed"], "cached": True})
+            rec = {"config": cfg.canonical(), "reason": ent["failed"],
+                   "cached": True}
+            if ent.get("suggested_capacities"):
+                # cached failures replay the capacity-repair hint too
+                rec["suggested_capacities"] = ent["suggested_capacities"]
+            failures.append(rec)
             span(f"cached-failure: {ent['failed']}", cached=True)
             return None
         span("cached", cached=True, cycles=ent["sim_cycles"])
@@ -192,10 +228,15 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
         span("budget-skipped")
         return None
 
-    def fail(reason: str) -> None:
-        failures.append({"config": cfg.canonical(), "reason": reason,
-                         "cached": False})
-        cache.put(key, {"failed": reason})
+    def fail(reason: str, suggested: dict | None = None) -> None:
+        rec = {"config": cfg.canonical(), "reason": reason, "cached": False}
+        ent = {"failed": reason}
+        hint = _hint_json(suggested)
+        if hint:
+            rec["suggested_capacities"] = hint
+            ent["suggested_capacities"] = hint
+        failures.append(rec)
+        cache.put(key, ent)
         span(f"failed: {reason}")
 
     try:
@@ -225,6 +266,17 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
             # routed hop depth — ideal minima back-pressure on long routes
             apply_routed_capacities(rf)
 
+    if static_gate:
+        # after apply_routed_capacities so the gate judges the capacities
+        # the engine would actually run with
+        sr = static_prune_reason(plan, fabric=rf)
+        if sr is not None:
+            reason, suggested = sr
+            if paranoia:
+                _paranoia_check(target, cfg, plan, machine, state, rf)
+            fail(reason, suggested)
+            return None
+
     from repro.telemetry import Telemetry, attribute
     mtel = Telemetry(timeline=False)      # counters only: cheap attribution
     x = target.make_input(plan)
@@ -234,7 +286,8 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
                        telemetry=mtel)
     except SimDeadlock as e:
         state.charge(e.cycles)            # the cycles burnt before giving up
-        fail(f"{'timeout' if e.timed_out else 'deadlock'}: {e}")
+        fail(f"{'timeout' if e.timed_out else 'deadlock'}: {e}",
+             getattr(e, "suggested_capacities", None))
         return None
     state.charge(res.cycles)
     if verify:
@@ -260,7 +313,8 @@ def _evaluate(target, cfg: MappingConfig, machine: Machine, *, scope: dict,
 def _stage1_batched(target, kept, machine, *, base_scope: dict,
                     seq_scope: dict, cache: EvalCache, state: _BudgetState,
                     engine: str, failures: list, skipped: list,
-                    verify: bool, tel=None) -> list[EvalPoint]:
+                    verify: bool, tel=None, static_gate: bool = False,
+                    paranoia: bool = False) -> list[EvalPoint]:
     """Stage-1 ideal sweep as chunked one-device-call jax batches.
 
     Pending (uncached, in-budget) configs are built, chunked into groups of
@@ -302,8 +356,11 @@ def _stage1_batched(target, kept, machine, *, base_scope: dict,
         ent = cache.get(key)
         if ent is not None:
             if "failed" in ent:
-                failures.append({"config": cfg.canonical(),
-                                 "reason": ent["failed"], "cached": True})
+                rec = {"config": cfg.canonical(),
+                       "reason": ent["failed"], "cached": True}
+                if ent.get("suggested_capacities"):
+                    rec["suggested_capacities"] = ent["suggested_capacities"]
+                failures.append(rec)
                 span(key, f"cached-failure: {ent['failed']}", t0, cached=True)
             else:
                 span(key, "cached", t0, cached=True,
@@ -337,6 +394,24 @@ def _stage1_batched(target, kept, machine, *, base_scope: dict,
                 cache.put(key, {"failed": f"build: {e}"})
                 span(key, f"failed: build: {e}", t0)
                 continue
+            if static_gate:
+                sr = static_prune_reason(plan)
+                if sr is not None:
+                    reason, suggested = sr
+                    if paranoia:
+                        _paranoia_check(target, cfg, plan, machine, state,
+                                        None)
+                    rec = {"config": cfg.canonical(), "reason": reason,
+                           "cached": False}
+                    ent = {"failed": reason}
+                    hint = _hint_json(suggested)
+                    if hint:
+                        rec["suggested_capacities"] = hint
+                        ent["suggested_capacities"] = hint
+                    failures.append(rec)
+                    cache.put(key, ent)
+                    span(key, f"failed: {reason}", t0)
+                    continue
             lanes.append((cfg, key, plan, target.make_input(plan), t0))
         if not lanes:
             continue
@@ -358,9 +433,15 @@ def _stage1_batched(target, kept, machine, *, base_scope: dict,
                 state.charge(res.cycles)  # the cycles burnt before giving up
                 reason = (f"{'timeout' if res.timed_out else 'deadlock'}: "
                           f"{res}")
-                failures.append({"config": cfg.canonical(),
-                                 "reason": reason, "cached": False})
-                cache.put(key, {"failed": reason})
+                rec = {"config": cfg.canonical(), "reason": reason,
+                       "cached": False}
+                ent = {"failed": reason}
+                hint = _hint_json(getattr(res, "suggested_capacities", None))
+                if hint:
+                    rec["suggested_capacities"] = hint
+                    ent["suggested_capacities"] = hint
+                failures.append(rec)
+                cache.put(key, ent)
                 span(key, f"failed: {reason}", t0)
                 continue
             state.charge(res.cycles)
@@ -386,7 +467,9 @@ def explore(target, machine: Machine, *,
             engine: str = "vector",
             workload_timesteps: int = 1,
             verify: bool = False,
-            telemetry=None) -> ExploreResult:
+            telemetry=None,
+            static_verify: bool = True,
+            static_paranoia: bool = False) -> ExploreResult:
     """Search mapping configs for ``target`` (a ``StencilSpec``, a
     ``StencilProgram``, or a ready-made target) on ``machine`` and return
     the measured Pareto front.  See the module docstring for the staging;
@@ -395,7 +478,16 @@ def explore(target, machine: Machine, *,
     ``telemetry``: a ``repro.telemetry.Telemetry`` sink — the search records
     one structured span per evaluation into it (config hash, outcome or
     prune reason, cache hit/miss, wall time, budget remaining), exportable
-    as a search-timeline trace via ``repro.telemetry.write_trace``."""
+    as a search-timeline trace via ``repro.telemetry.write_trace``.
+
+    ``static_verify`` (default on) runs every freshly-built plan through the
+    static verifier (``repro.analysis.static_verify``) before paying for any
+    simulation: provable deadlocks are recorded as ``static-capacity`` /
+    ``static-deadlock`` failures — with the verifier's
+    ``suggested_capacities`` repair hint on the failure record and in the
+    cache entry — and never reach an engine.  ``static_paranoia``
+    additionally simulates every statically-rejected config and asserts it
+    really deadlocks (the fuzz-suite soundness gate; expensive)."""
     t0 = time.perf_counter()
     target = as_target(target, workload_timesteps=workload_timesteps)
     options = options or SpaceOptions()
@@ -425,11 +517,16 @@ def explore(target, machine: Machine, *,
     # engine + engine_semantics scope a measurement to the backend (and its
     # semantics version) that took it: batched-jax evals can never be
     # replayed as vector evals or vice versa.
+    # static_semantics scopes entries to the static-verifier version that
+    # gated them: a verifier semantics bump (or turning the gate off) must
+    # re-measure, not replay verdict-dependent failures from cache.
     base_scope = {"target": target.signature(),
                   "machine": _machine_sig(machine), "engine": engine,
                   "engine_semantics": ENGINE_SEMANTICS[engine],
                   "sim_max_cycles": budget.sim_max_cycles,
-                  "capacity_model": "hop/v1"}
+                  "capacity_model": "hop/v1",
+                  "static_semantics":
+                      STATIC_SEMANTICS if static_verify else None}
 
     # ----- stage 1: ideal-mode sweep ----------------------------------------
     scope = {**base_scope, "mode": "ideal"}
@@ -437,14 +534,16 @@ def explore(target, machine: Machine, *,
         ideal_points = _stage1_batched(
             target, kept, machine, base_scope=base_scope, seq_scope=scope,
             cache=cache, state=state, engine=engine, failures=failures,
-            skipped=skipped, verify=verify, tel=telemetry)
+            skipped=skipped, verify=verify, tel=telemetry,
+            static_gate=static_verify, paranoia=static_paranoia)
     else:
         ideal_points = []
         for cfg in kept:
             pt = _evaluate(target, cfg, machine, scope=scope, cache=cache,
                            state=state, engine=engine, failures=failures,
                            skipped=skipped, verify=verify, routed=False,
-                           tel=telemetry)
+                           tel=telemetry, static_gate=static_verify,
+                           paranoia=static_paranoia)
             if pt is not None:
                 ideal_points.append(pt)
 
@@ -469,7 +568,9 @@ def explore(target, machine: Machine, *,
                     rpt = _evaluate(target, cfg, machine, scope=scope,
                                     cache=cache, state=state, engine=engine,
                                     failures=failures, skipped=skipped,
-                                    verify=False, routed=True, tel=telemetry)
+                                    verify=False, routed=True, tel=telemetry,
+                                    static_gate=static_verify,
+                                    paranoia=static_paranoia)
                     if rpt is not None:
                         routed_points.append(rpt)
         points = routed_points
@@ -486,11 +587,20 @@ def explore(target, machine: Machine, *,
 
     front = pareto_front(points, key=EvalPoint.objectives)
     cache.save()
+    # fold static-gate rejections into the prune log (reason prefix only:
+    # "static-capacity"/"static-deadlock") so artifacts report them next to
+    # the analytical prune rules; they stay in `failures` with full detail.
+    for f in failures:
+        if f["reason"].startswith("static-"):
+            pfx = f["reason"].split(":", 1)[0]
+            plog.reasons[pfx] = plog.reasons.get(pfx, 0) + 1
     stats = {
         "n_configs": len(configs), "n_pruned": len(plog.dropped),
         "n_kept": len(kept), "n_measured": state.evals,
         "n_cached": cache.hits, "n_failures": len(failures),
         "n_budget_skipped": len(skipped),
+        "static_pruned": sum(1 for f in failures
+                             if f["reason"].startswith("static-")),
         "sim_cycles_total": state.sim_cycles,
         "wall_s": round(time.perf_counter() - t0, 3),
         "cache": cache.stats(),

@@ -212,22 +212,100 @@ def test_explore_cache_makes_rerun_free(tmp_path):
 
 
 def test_explore_records_deadlock_as_failure():
-    """A fixed queue capacity below the mandatory-buffering bound deadlocks;
-    the tuner must record the failure (and cache it) and keep searching."""
+    """A fixed queue capacity below the mandatory-buffering bound is doomed;
+    the static gate (default on) rejects it before any simulation — with a
+    repair hint — and the failure is cached; with the gate off the engine
+    discovers the same deadlock dynamically."""
     spec = heat_2d(10, 20, dtype="float64")    # 2D: outer-axis gate >> 1
     cache = EvalCache()
-    res = explore(spec, CGRA,
-                  options=SpaceOptions(workers=(2,), capacities=(1, "auto")),
-                  cache=cache)
+    opts = SpaceOptions(workers=(2,), capacities=(1, "auto"))
+    res = explore(spec, CGRA, options=opts, cache=cache)
     reasons = [f["reason"] for f in res.failures]
-    assert any(r.startswith("deadlock") for r in reasons), reasons
+    assert any(r.startswith("static-capacity") for r in reasons), reasons
+    assert res.stats["static_pruned"] > 0
     assert res.front                          # the auto config still wins
     assert all(p.config.capacity == "auto" for p in res.front)
-    # the failure is cached: a rerun skips the doomed simulation
-    res2 = explore(spec, CGRA,
-                   options=SpaceOptions(workers=(2,), capacities=(1, "auto")),
-                   cache=cache)
-    assert any(f.get("cached") for f in res2.failures)
+    # the failure is cached: a rerun skips the doomed config entirely,
+    # replaying the capacity-repair hint from the cache record
+    res2 = explore(spec, CGRA, options=opts, cache=cache)
+    cached = [f for f in res2.failures if f.get("cached")]
+    assert cached and all(f["suggested_capacities"] for f in cached)
+    # gate off: the engine pays for the same discovery dynamically
+    res3 = explore(spec, CGRA, options=opts, cache=EvalCache(),
+                   static_verify=False)
+    reasons3 = [f["reason"] for f in res3.failures]
+    assert any(r.startswith("deadlock") for r in reasons3), reasons3
+    assert res3.stats["static_pruned"] == 0
+    # and the gate never changes the search outcome
+    assert sorted(p.objectives() for p in res3.points) == \
+        sorted(p.objectives() for p in res.points)
+
+
+def test_static_gate_hint_replays_onto_rebuilt_plan():
+    """eids are deterministic per config: the JSON-string hint a cached
+    failure replays applies cleanly to a freshly rebuilt plan and makes it
+    complete."""
+    from repro.analysis import apply_suggested_capacities
+    from repro.core import map_2d, simulate
+
+    spec = heat_2d(10, 20, dtype="float64")
+    res = explore(spec, CGRA,
+                  options=SpaceOptions(workers=(2,), capacities=(1, "auto")),
+                  cache=EvalCache())
+    fail = next(f for f in res.failures
+                if f["reason"].startswith("static-capacity"))
+    hint = fail["suggested_capacities"]
+    assert all(isinstance(k, str) for k in hint)   # JSON-stable form
+    plan = map_2d(spec, workers=2, queue_capacity=1)
+    assert apply_suggested_capacities(plan, hint) > 0
+    import numpy as np
+    x = np.random.default_rng(0).normal(size=spec.grid_shape)
+    simulate(plan, x, CGRA, max_cycles=2_000_000)  # deadlock would raise
+
+
+def test_static_paranoia_mode():
+    """static_paranoia simulates every statically-rejected config and
+    asserts it really deadlocks — it must pass on a true deadlock and the
+    results must match the non-paranoid run."""
+    spec = heat_2d(10, 20, dtype="float64")
+    opts = SpaceOptions(workers=(2,), capacities=(1, "auto"))
+    res = explore(spec, CGRA, options=opts, cache=EvalCache(),
+                  static_paranoia=True)
+    assert res.stats["static_pruned"] > 0
+    base = explore(spec, CGRA, options=opts, cache=EvalCache())
+    assert sorted(p.objectives() for p in res.points) == \
+        sorted(p.objectives() for p in base.points)
+
+
+def test_static_gate_batched_stage1():
+    """The batched jax stage 1 applies the same static gate at lane-build
+    time: same pruned reasons, same survivors as the sequential path."""
+    spec = heat_2d(10, 20, dtype="float64")
+    opts = SpaceOptions(workers=(2,), capacities=(1, "auto"))
+    seq = explore(spec, CGRA, options=opts, cache=EvalCache())
+    bat = explore(spec, CGRA, options=opts, cache=EvalCache(),
+                  budget=Budget(batch_size=4))
+    assert bat.stats["static_pruned"] == seq.stats["static_pruned"] > 0
+    assert sorted(p.sim_cycles for p in bat.ideal_points) == \
+        sorted(p.sim_cycles for p in seq.ideal_points)
+
+
+def test_static_semantics_scopes_cache(tmp_path):
+    """Entries taken under the static gate must not replay for a run with
+    the gate off (and vice versa): static_semantics is part of the scope,
+    exactly like a verifier version bump would be."""
+    p = str(tmp_path / "cache.json")
+    spec = heat_2d(10, 20, dtype="float64")
+    opts = SpaceOptions(workers=(2,), capacities=(1, "auto"))
+    first = explore(spec, CGRA, options=opts, cache=EvalCache(p))
+    assert first.stats["n_measured"] > 0
+    # same gate: full replay
+    again = explore(spec, CGRA, options=opts, cache=EvalCache(p))
+    assert again.stats["n_measured"] == 0
+    # gate off = different verifier semantics: nothing replays
+    off = explore(spec, CGRA, options=opts, cache=EvalCache(p),
+                  static_verify=False)
+    assert off.stats["n_measured"] > 0
 
 
 # ---------------------------------------------------------------------------

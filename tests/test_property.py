@@ -287,3 +287,87 @@ def test_explorer_front_non_dominated(case):
     assert res.best().cycles == min(p.cycles for p in res.points)
     if res.analytic is not None:
         assert res.best().cycles <= res.analytic.cycles
+
+
+# ---------------------------------------------------------------------------
+# static-verifier soundness (PR 10: repro.analysis.static_verify)
+# ---------------------------------------------------------------------------
+def _static_roundtrip(plan, x, max_cycles=2_000_000):
+    """The soundness oracle: whatever the verifier claims must match what
+    the engine does, and a suggested bump must always yield completion."""
+    from repro.analysis import apply_suggested_capacities, verify_plan
+    from repro.core.engine.common import SimDeadlock
+
+    rep = verify_plan(plan)
+    try:
+        simulate(plan, x, CGRA, max_cycles=max_cycles)
+        engine = "complete"
+    except SimDeadlock as e:
+        engine = "timeout" if e.timed_out else "deadlock"
+    if rep.verdict == "safe":
+        # the one unforgivable error: "safe" on a plan that deadlocks
+        assert engine == "complete", (rep.describe(), engine)
+    elif rep.verdict == "deadlock":
+        assert engine == "deadlock", (rep.describe(), engine)
+        if rep.suggested_capacities:
+            assert apply_suggested_capacities(
+                plan, rep.suggested_capacities) > 0
+            assert verify_plan(plan).verdict == "safe"
+            simulate(plan, x, CGRA, max_cycles=max_cycles)  # must complete
+    # verdict "unknown" makes no claim — nothing to check
+
+
+@given(spec_nd_and_workers(), st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_static_verdict_sound_on_random_specs(sw, cap, seed):
+    """Random rank-1/2/3 specs under deliberately under-provisioned fixed
+    capacities: the static verdict always matches the engine, and the
+    repair hint always completes."""
+    from repro.core.mapping import map_nd
+
+    spec, w = sw
+    x = np.random.default_rng(seed).normal(size=spec.grid_shape)
+    _static_roundtrip(map_nd(spec, workers=w, queue_capacity=cap), x)
+
+
+@given(program_dag(), st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_static_verdict_sound_on_random_programs(pw, cap, seed):
+    """Random stencil-program DAGs (fan-out, combines, skew buffers) under
+    starved capacities: same soundness contract as the spec sweep."""
+    from repro.program import lower
+
+    prog, w = pw
+    rng = np.random.default_rng(seed)
+    plan = lower(prog, workers=w, queue_capacity=cap)
+    x = plan.pack_inputs({f: rng.normal(size=prog.grid_shape)
+                          for f in prog.in_fields})
+    _static_roundtrip(plan, x)
+
+
+@given(spec_nd_and_workers(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_verify_static_preflight_matches_engine(sw, seed):
+    """simulate(verify="static") either raises StaticDeadlock (and the
+    suggested bump completes) or simulates to the oracle-exact result —
+    never a dynamic deadlock slipping past the pre-flight."""
+    from repro.analysis import StaticDeadlock, apply_suggested_capacities
+    from repro.core.mapping import map_nd
+
+    spec, w = sw
+    x = np.random.default_rng(seed).normal(size=spec.grid_shape)
+    plan = map_nd(spec, workers=w, queue_capacity=1)
+    try:
+        res = simulate(plan, x, CGRA, max_cycles=2_000_000, verify="static")
+    except StaticDeadlock as e:
+        assert e.cycles == 0
+        if e.suggested_capacities:
+            plan2 = map_nd(spec, workers=w, queue_capacity=1)
+            assert apply_suggested_capacities(
+                plan2, e.suggested_capacities) > 0
+            res = simulate(plan2, x, CGRA, max_cycles=2_000_000,
+                           verify="static")
+        else:
+            return
+    np.testing.assert_allclose(res.output, stencil_reference_np(x, spec),
+                               atol=1e-9)

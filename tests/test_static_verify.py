@@ -1,0 +1,349 @@
+"""The static plan verifier (repro.analysis.static_verify) + lint CLI.
+
+The contract under test, end to end:
+
+* **soundness on the known deadlocks** — every capacity-starved case the
+  engine suite proves dynamically (2D/3D mandatory buffering, the hdiff
+  skew buffer) is rejected *statically*, with a named counterexample, and
+  the verifier's suggested capacity bump turns each one into a completing,
+  oracle-exact simulation.
+* **no false alarms** — auto-capacity and unbounded plans verify safe (the
+  fast min-capacities certificate where the plan records its minima, token
+  quiescence otherwise), routed or ideal.
+* **throughput bound** — cycles_lb / fill_lb never exceed the measured
+  cycle count / attribution fill phase.
+* **wiring** — ``simulate(verify="static")`` raises ``StaticDeadlock``
+  before burning engine cycles; a dynamic ``SimDeadlock`` carries the same
+  repair hint; the lint CLI walks examples/ hooks.
+"""
+import io
+import types
+
+import numpy as np
+import pytest
+
+from repro.analysis import (StaticDeadlock, apply_suggested_capacities,
+                            lint_plan, throughput_bound, verify_plan)
+from repro.core import CGRA, map_2d, map_3d, simulate
+from repro.core.dfg import DFG
+from repro.core.engine.common import SimDeadlock
+from repro.core.reference import stencil_reference_np
+from repro.core.spec import heat_2d, heat_3d
+from repro.fabric import FabricTopology, place, route
+from repro.program import hdiff_program, lower
+
+
+def _starved_cases():
+    """Every deadlock the engine suite proves dynamically, as (name,
+    starved plan factory, safe reference input)."""
+    h2 = heat_2d(18, 24, dtype="float64")
+    h3 = heat_3d(8, 10, 12, dtype="float64")
+    hd = hdiff_program(20, 24)
+    rng = np.random.default_rng(0)
+    return [
+        ("heat2d_cap1_w3", lambda: map_2d(h2, workers=3, queue_capacity=1),
+         h2, rng.normal(size=h2.grid_shape)),
+        ("heat3d_cap1_w4", lambda: map_3d(h3, workers=4, queue_capacity=1),
+         h3, rng.normal(size=h3.grid_shape)),
+        ("hdiff_cap2_w4", lambda: lower(hd, workers=4, queue_capacity=2),
+         hd, rng.normal(size=(20, 24))),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# deadlock detection: every engine-proven deadlock is statically rejected
+# ---------------------------------------------------------------------------
+def test_known_deadlocks_statically_rejected():
+    for name, mk, _spec, _x in _starved_cases():
+        rep = verify_plan(mk())
+        assert rep.verdict == "deadlock", (name, rep.describe())
+        assert rep.reason == "static-capacity", name
+        assert rep.counterexample is not None, name
+        assert rep.counterexample.kind in ("waits-cycle", "starvation-chain")
+        assert rep.counterexample.nodes          # named, not anonymous
+        assert rep.suggested_capacities, name
+
+
+def test_suggested_bump_completes_and_matches_oracle():
+    """The repair hint is not just plausible — applying it yields a
+    completing, bit-exact simulation for every starved case."""
+    from repro.program import program_reference_np
+
+    for name, mk, spec, x in _starved_cases():
+        plan = mk()
+        rep = verify_plan(plan)
+        grown = apply_suggested_capacities(plan, rep.suggested_capacities)
+        assert grown > 0, name
+        assert verify_plan(plan).verdict == "safe", name
+        if hasattr(spec, "grid_shape") and not hasattr(spec, "schedule"):
+            res = simulate(plan, x, CGRA, max_cycles=2_000_000)
+            np.testing.assert_allclose(
+                res.output, stencil_reference_np(x, spec), atol=1e-9)
+        else:                              # the hdiff program target
+            res = simulate(plan, plan.pack_inputs({"inp": x}), CGRA,
+                           max_cycles=2_000_000)
+            ref = program_reference_np(spec, {"inp": x})
+            np.testing.assert_allclose(
+                plan.unpack_outputs(res.output)["out"], ref["out"],
+                atol=1e-9)
+
+
+def test_engine_agrees_with_static_verdict():
+    """The statically-rejected plans really deadlock (not timeout) when
+    simulated — the abstract quiescence matches the engines."""
+    for name, mk, _spec, x in _starved_cases():
+        plan = mk()
+        xin = x if not hasattr(_spec, "schedule") else \
+            plan.pack_inputs({"inp": x})
+        with pytest.raises(SimDeadlock) as ei:
+            simulate(plan, xin, CGRA, max_cycles=500_000)
+        assert not ei.value.timed_out, name
+
+
+def test_safe_plans_verify_safe_auto_and_unbounded(rng):
+    spec = heat_2d(18, 24, dtype="float64")
+    auto = map_2d(spec, workers=3, auto_capacity=True)
+    rep = verify_plan(auto)
+    assert rep.ok() and rep.certificate == "min-capacities"
+    unbounded = map_2d(spec, workers=3)
+    rep_u = verify_plan(unbounded)
+    assert rep_u.ok()
+    # cross-check: both really complete
+    x = rng.normal(size=spec.grid_shape)
+    simulate(auto, x, CGRA)
+    simulate(unbounded, x, CGRA)
+
+
+def test_quiescence_path_proves_safety_without_minima(rng):
+    """With no recorded analytic minima the fast certificate cannot apply —
+    the token-flow replay must prove safety on its own."""
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, queue_capacity=64)
+    plan.min_capacities = {}               # force the quiescence prover
+    rep = verify_plan(plan)
+    assert rep.verdict == "safe" and rep.certificate == "quiescence"
+    simulate(plan, rng.normal(size=spec.grid_shape), CGRA)
+
+
+# ---------------------------------------------------------------------------
+# simulate() wiring: pre-flight + repair hint on dynamic deadlocks
+# ---------------------------------------------------------------------------
+def test_simulate_verify_static_preflight(rng):
+    spec = heat_2d(18, 24, dtype="float64")
+    x = rng.normal(size=spec.grid_shape)
+    starved = map_2d(spec, workers=3, queue_capacity=1)
+    with pytest.raises(StaticDeadlock) as ei:
+        simulate(starved, x, CGRA, verify="static")
+    assert ei.value.cycles == 0            # nothing was simulated
+    assert ei.value.suggested_capacities
+    assert ei.value.report.counterexample is not None
+    # safe plan passes the pre-flight and simulates normally
+    ok = map_2d(spec, workers=3, auto_capacity=True)
+    res = simulate(ok, x, CGRA, verify="static")
+    np.testing.assert_allclose(res.output, stencil_reference_np(x, spec),
+                               atol=1e-9)
+    with pytest.raises(ValueError, match="verify mode"):
+        simulate(ok, x, CGRA, verify="dynamic")
+
+
+def test_dynamic_deadlock_carries_repair_hint(rng):
+    """An engine-discovered SimDeadlock is enriched with the verifier's
+    suggested_capacities; applying them completes the run."""
+    spec = heat_2d(18, 24, dtype="float64")
+    x = rng.normal(size=spec.grid_shape)
+    plan = map_2d(spec, workers=3, queue_capacity=1)
+    with pytest.raises(SimDeadlock) as ei:
+        simulate(plan, x, CGRA, max_cycles=200_000)
+    hint = ei.value.suggested_capacities
+    assert hint
+    plan2 = map_2d(spec, workers=3, queue_capacity=1)
+    assert apply_suggested_capacities(plan2, hint) > 0
+    res = simulate(plan2, x, CGRA, max_cycles=2_000_000)
+    np.testing.assert_allclose(res.output, stencil_reference_np(x, spec),
+                               atol=1e-9)
+
+
+def test_apply_suggested_accepts_json_string_keys():
+    """Cache records round-trip hints through JSON, stringifying eid keys;
+    apply_suggested_capacities must accept them as-is."""
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, queue_capacity=1)
+    hint = verify_plan(plan).suggested_capacities
+    json_hint = {str(k): int(v) for k, v in hint.items()}
+    plan2 = map_2d(spec, workers=3, queue_capacity=1)
+    assert apply_suggested_capacities(plan2, json_hint) > 0
+    assert verify_plan(plan2).verdict == "safe"
+
+
+# ---------------------------------------------------------------------------
+# routed verification
+# ---------------------------------------------------------------------------
+def test_routed_verdict_matches_ideal(rng):
+    """The network never changes the deadlock verdict (module-docstring
+    argument); routed lints are clean on a real routed fabric."""
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, auto_capacity=True)
+    rf = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    rep = verify_plan(plan, fabric=rf)
+    assert rep.ok()
+    x = rng.normal(size=spec.grid_shape)
+    res = simulate(plan, x, CGRA, fabric=rf, verify="static")
+    assert res.cycles >= rep.bound.cycles_lb
+
+    starved = map_2d(spec, workers=3, queue_capacity=1)
+    rf2 = route(place(starved, FabricTopology.mesh(16, 16), seed=0))
+    assert verify_plan(starved, fabric=rf2).verdict == "deadlock"
+
+
+# ---------------------------------------------------------------------------
+# throughput bound vs measurement
+# ---------------------------------------------------------------------------
+def test_bound_below_measured_cycles(rng):
+    from repro.telemetry import Telemetry, attribute
+
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, auto_capacity=True)
+    bound = throughput_bound(plan, machine=CGRA)
+    x = rng.normal(size=spec.grid_shape)
+    tel = Telemetry(timeline=False)
+    res = simulate(plan, x, CGRA, telemetry=tel)
+    assert 0 < bound.cycles_lb <= res.cycles
+    assert bound.stores == res.stores
+    # required fires are completion-necessary: the fair engine may fire a
+    # few surplus loads completion never waited on
+    assert 0 < bound.loads <= res.loads
+    assert bound.ii_lb <= res.cycles / res.stores
+    acct = attribute(tel, res)
+    assert bound.fill_lb <= acct.phases["fill"] + 1
+    assert bound.stage_fill                 # per-stage depths present
+
+
+def test_bound_routed_at_least_ideal():
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, auto_capacity=True)
+    ideal = throughput_bound(plan, machine=CGRA)
+    rf = route(place(plan, FabricTopology.mesh(16, 16), seed=0))
+    routed = throughput_bound(plan, fabric=rf, machine=CGRA)
+    assert routed.depth_cycles_lb >= ideal.depth_cycles_lb
+
+
+# ---------------------------------------------------------------------------
+# lints
+# ---------------------------------------------------------------------------
+def _fake_plan(g):
+    return types.SimpleNamespace(dfg=g)
+
+
+def test_lint_cyclic_dfg():
+    g = DFG("cyc")
+    a = g.add("copy", "a")
+    b = g.add("copy", "b")
+    g.connect(a, b)
+    g.connect(b, a)
+    rep = verify_plan(_fake_plan(g))
+    assert rep.verdict == "deadlock" and rep.reason == "static-deadlock"
+    assert any(f.kind == "cyclic-dfg" for f in rep.findings)
+
+
+def test_lint_no_cmp():
+    g = DFG("nocmp")
+    g.add("addr", "a", count=4)
+    rep = verify_plan(_fake_plan(g))
+    assert rep.verdict == "deadlock" and rep.certificate == "lint"
+    assert any(f.kind == "no-cmp" for f in rep.findings)
+
+
+def test_lint_zero_capacity_and_sync():
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, auto_capacity=True)
+    edges = plan.dfg.finalize()
+    edges[0].capacity = 0
+    findings = lint_plan(plan)
+    assert any(f.kind == "zero-capacity" and f.severity == "error"
+               for f in findings)
+    # break a sync expectation: starved error
+    sync = next(nd for nd in plan.dfg.nodes if nd.op == "sync")
+    sync.params["expected"] = int(sync.params["expected"]) + 10_000
+    findings = lint_plan(plan)
+    assert any(f.kind == "sync-starved" for f in findings)
+
+
+def test_lint_stale_compile_on_real_cache():
+    """The stale-compile lint must read the real compiled_for() cache shape
+    ((fabric, CompiledPlan) pairs) — simulate to populate it, then mutate."""
+    spec = heat_2d(8, 8, dtype="float64")
+    plan = map_2d(spec, workers=2, auto_capacity=True)
+    x = np.zeros(spec.grid_shape)
+    simulate(plan, x, CGRA, engine="vector")
+    assert not any(f.kind == "stale-compile" for f in lint_plan(plan))
+    plan.dfg.mark_mutated()
+    findings = lint_plan(plan)
+    assert any(f.kind == "stale-compile" and f.severity == "warning"
+               for f in findings)
+
+
+def test_deadlocked_plan_resimulates_cleanly():
+    """A deadlocked interp run must not poison the plan for a retry: apply
+    the repair hint to the SAME object and the rerun completes at the
+    oracle answer (queues restart from the quiescent marking)."""
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, queue_capacity=1)
+    x = np.random.default_rng(7).normal(size=spec.grid_shape)
+    with pytest.raises(SimDeadlock) as ei:
+        simulate(plan, x, CGRA, engine="interp")
+    hint = ei.value.suggested_capacities
+    assert hint and apply_suggested_capacities(plan, hint) > 0
+    res = simulate(plan, x, CGRA, engine="interp")
+    np.testing.assert_allclose(res.output, stencil_reference_np(x, spec),
+                               atol=1e-9)
+
+
+def test_lint_splice_geometry():
+    """Worker-mismatched program stages force imux re-interleave buffers;
+    corrupting one's pattern must trip the splice lints."""
+    from repro.program import StencilOp, StencilProgram
+
+    spec = heat_2d(16, 24, dtype="float64")
+    prog = StencilProgram("mm", [StencilOp("a", spec, "u", "v"),
+                                 StencilOp("b", spec, "v", "w")])
+    plan = lower(prog, workers={"a": 2, "b": 3}, auto_capacity=True)
+    assert lint_plan(plan) == []           # clean as lowered
+    imux = next(nd for nd in plan.dfg.nodes if nd.op == "imux")
+    imux.params["pattern"] = list(imux.params["pattern"])[:-1] + [0]
+    findings = lint_plan(plan)
+    assert any(f.kind in ("splice-geometry", "splice-pattern")
+               for f in findings)
+
+
+def test_lint_routed_slot_conflict():
+    """Squeezing a real placement onto a fabric that claims fewer slots per
+    PE than the placement used must raise slot-conflict."""
+    spec = heat_2d(18, 24, dtype="float64")
+    plan = map_2d(spec, workers=3, auto_capacity=True)
+    topo = FabricTopology.mesh(16, 16)
+    rf = route(place(plan, topo, seed=0))
+    assert lint_plan(plan, rf) == []
+    per_pe: dict = {}
+    for coord in rf.placement.coords.values():
+        per_pe[coord] = per_pe.get(coord, 0) + 1
+    busiest = max(per_pe.values())
+    if busiest < 2:
+        pytest.skip("placement never doubles up on this topology")
+    import dataclasses
+    for coord, pe in list(topo.pes.items()):
+        topo.pes[coord] = dataclasses.replace(pe, slots=1)
+    findings = lint_plan(plan, rf)
+    assert any(f.kind == "slot-conflict" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# lint CLI
+# ---------------------------------------------------------------------------
+def test_lint_cli_walks_examples():
+    from repro.analysis.lint import lint_paths, main
+
+    out = io.StringIO()
+    n_plans, n_failed = lint_paths(["examples"], out=out)
+    assert n_plans >= 7 and n_failed == 0, out.getvalue()
+    assert main(["examples", "--strict"]) == 0
+    assert main(["src/repro/analysis"]) == 1   # no hooks found anywhere
